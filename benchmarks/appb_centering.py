@@ -1,0 +1,34 @@
+"""Appendix B: distribution centering — the paper's documented NEGATIVE
+result.  Centering pays 2x scale bits (mean + absmax per block) and does
+not improve weight-quantization scaling.  We reproduce the non-effect."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import QuantConfig
+
+
+def run(log=print):
+    family = common.trained_family(log=log)
+    rows, deltas = [], []
+    for name, (cfg, params) in family.items():
+        toks = common.eval_tokens(cfg)
+        for bits in (4, 8):
+            p0, b0, t0 = common.evaluate_quant(
+                cfg, params, QuantConfig(bits=bits, dtype="int"), toks)
+            p1, b1, t1 = common.evaluate_quant(
+                cfg, params, QuantConfig(bits=bits, dtype="int",
+                                         centering=True), toks)
+            deltas.append(np.log(p1) - np.log(p0))
+            rows.append((f"appb/{name}/k{bits}", 0.0,
+                         f"plain={p0:.3f}@{b0:.2f}bpp;centered={p1:.3f}@{b1:.2f}bpp"))
+            log(f"  {name} k={bits} plain {p0:.3f} ({b0:.2f}bpp) "
+                f"centered {p1:.3f} ({b1:.2f}bpp)")
+    mean_delta = float(np.mean(deltas))
+    rows.append(("appb/mean_logppl_delta", 0.0, f"{mean_delta:+.5f}"))
+    log(f"appB centering: mean log-ppl delta {mean_delta:+.5f} at +16/B bits "
+        f"cost (paper: no improvement -> expect >= ~0)")
+    common.save_json("appb_centering", {"mean_delta": mean_delta})
+    return rows, mean_delta

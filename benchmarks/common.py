@@ -1,0 +1,98 @@
+"""Shared benchmark infrastructure: train-once-cache the tiny model family,
+quantization evaluation helpers, CSV output in `name,us_per_call,derived`
+format (one benchmark module per paper table/figure)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import QuantConfig
+from repro.configs.tiny import TINY_FAMILY
+from repro.data.synthetic import ZipfMarkov
+from repro.models.quantize import bits_report, quantize_params
+from repro.serving import perplexity
+from repro.train import loop
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+CKPT = ART / "ckpt"
+
+TRAIN_RECIPE = {  # steps tuned for CPU wall-time vs. learnability
+    "tiny-160k": dict(steps=260, batch=32, seq_len=128),
+    "tiny-650k": dict(steps=260, batch=32, seq_len=128),
+    "tiny-2.6m": dict(steps=220, batch=32, seq_len=128),
+    "tiny-10m": dict(steps=160, batch=16, seq_len=128),
+}
+
+
+def trained_family(sizes=None, log=print):
+    """Train (or load cached) the tiny model ladder; returns
+    {name: (cfg, params)}."""
+    out = {}
+    for name, cfg in TINY_FAMILY.items():
+        if sizes and name not in sizes:
+            continue
+        ckpt_dir = CKPT / name
+        recipe = TRAIN_RECIPE[name]
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.train import step as step_mod
+
+        mgr = CheckpointManager(ckpt_dir)
+        template = jax.eval_shape(
+            lambda c=cfg: step_mod.init_state(jax.random.PRNGKey(0), c)
+        )
+        zeros = jax.tree.map(lambda s: jax.numpy.zeros(s.shape, s.dtype), template)
+        if (mgr.latest_step() or 0) >= recipe["steps"]:
+            _, state, _ = mgr.restore(zeros)
+            log(f"[cache] {name}")
+        else:
+            t0 = time.time()
+            state, hist = loop.train(cfg, ckpt_dir=str(ckpt_dir),
+                                     ckpt_every=10_000, log=lambda *_: None,
+                                     **recipe)
+            log(f"[train] {name}: loss {hist[0]:.3f}->{hist[-1]:.3f} "
+                f"({time.time()-t0:.0f}s)")
+        out[name] = (cfg, state.params)
+    return out
+
+
+def eval_tokens(cfg, n_seqs=24, seq_len=129, seed=1234):
+    return ZipfMarkov(cfg.vocab_size).sample(jax.random.PRNGKey(seed), n_seqs, seq_len)
+
+
+def evaluate_quant(cfg, params, qcfg: QuantConfig | None, toks):
+    """Returns (perplexity, bits_per_param, total_bits) for one config."""
+    if qcfg is None:
+        n = sum(x.size for x in jax.tree.leaves(params)
+                if hasattr(x, "size"))
+        return perplexity(params, cfg, toks), 16.0, 16.0 * n
+    qp = quantize_params(params, qcfg, cfg)
+    rep = bits_report(qp)
+    return (perplexity(qp, cfg, toks), rep["avg_bits_per_param"],
+            rep["total_bits_ideal"])
+
+
+def timed(fn, *args, repeats=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def emit(rows):
+    """CSV rows: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name, obj):
+    p = ART / "bench"
+    p.mkdir(parents=True, exist_ok=True)
+    with open(p / f"{name}.json", "w") as f:
+        json.dump(obj, f, indent=1, default=float)

@@ -1,0 +1,44 @@
+"""Figure 4: outlier-dependent (proxy) quantization.
+
+Paper claims: proxy quantization (top-2% producer-std dims in 16-bit)
+stabilizes/improves 3-bit, has no benefit at 4-bit, and even improved
+3-bit still loses to plain 4-bit at the bit level.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import QuantConfig
+
+
+def run(log=print):
+    family = common.trained_family(log=log)
+    rows = []
+    agg = {}
+    for name, (cfg, params) in family.items():
+        toks = common.eval_tokens(cfg)
+        res = {}
+        for label, qcfg in {
+            "3bit": QuantConfig(bits=3, dtype="float", block_size=64),
+            "3bit+proxy2%": QuantConfig(bits=3, dtype="float", block_size=64,
+                                        outlier_pct=0.02),
+            "4bit": QuantConfig(bits=4, dtype="float", block_size=64),
+            "4bit+proxy2%": QuantConfig(bits=4, dtype="float", block_size=64,
+                                        outlier_pct=0.02),
+        }.items():
+            ppl, bpp, total = common.evaluate_quant(cfg, params, qcfg, toks)
+            res[label] = (ppl, total)
+            rows.append((f"fig4/{name}/{label}", 0.0,
+                         f"ppl={ppl:.3f};bits={total:.3e}"))
+            log(f"  {name} {label:13s} ppl={ppl:8.3f}")
+        agg[name] = {k: v[0] for k, v in res.items()}
+    helps_3bit = np.mean([a["3bit+proxy2%"] <= a["3bit"] * 1.001 for a in agg.values()])
+    beats_4bit = np.mean([a["3bit+proxy2%"] < a["4bit"] for a in agg.values()])
+    rows.append(("fig4/proxy_helps_3bit_frac", 0.0, f"{helps_3bit:.2f}"))
+    rows.append(("fig4/proxy3bit_beats_4bit_frac", 0.0, f"{beats_4bit:.2f}"))
+    log(f"fig4: proxy helps 3-bit on {helps_3bit:.0%} of models; "
+        f"3-bit+proxy beats 4-bit on {beats_4bit:.0%} (paper: ~100% / 0%)")
+    common.save_json("fig4_proxy", agg)
+    return rows, agg

@@ -1,0 +1,42 @@
+"""Kernel-layer microbench (paper §2.1: latency tracks weight bytes).
+
+On this CPU container we cannot time the TPU kernel; we (a) time the
+pure-JAX dequant-matmul path at a decode-like GEMV shape for several k,
+(b) report the DERIVED quantity that actually moves TPU latency: weight
+bytes streamed per matmul = stored_bits/16 of bf16 — the kernel's HBM
+traffic contract (validated structurally by tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.packing import stored_bits_per_param
+from repro.kernels import ops
+
+
+def run(log=print):
+    rows = []
+    M, K, N = 8, 2048, 2048  # decode-like small-batch GEMV
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.02
+
+    dense = jax.jit(lambda x, w: x @ w)
+    us_dense = common.timed(dense, x, w.astype(jnp.float32))
+    rows.append(("kernel/dense_f32", us_dense, f"bytes={K*N*4}"))
+
+    for bits in (3, 4, 8):
+        op = ops.prepare_operand(w, bits=bits, dtype="int", block_size=64)
+        f = jax.jit(lambda x, p=op: ops.qmatmul(x, p, use_kernel=False))
+        us = common.timed(f, x)
+        wbytes = int(K * N * stored_bits_per_param(bits) / 8
+                     + K * N / 64 * 2)
+        ratio = wbytes / (K * N * 2)
+        rows.append((f"kernel/qmatmul_ref_k{bits}", us,
+                     f"weight_bytes={wbytes};vs_bf16={ratio:.3f}x"))
+        log(f"  k={bits}: ref-path {us:8.1f} us/call; TPU HBM contract "
+            f"{ratio:.3f}x of bf16 weight bytes")
+    common.save_json("kernel_bench", {"rows": [(r[0], r[1], r[2]) for r in rows]})
+    return rows, None

@@ -1,0 +1,49 @@
+"""End-to-end serving driver (the paper's deployment story): train a small
+LM, quantize it per the paper's recommendation (4-bit float, block 64),
+and serve batched generation requests, comparing quality & model bytes
+against the fp16 baseline.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import sys, time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import QuantConfig
+from repro.configs.registry import get_arch
+from repro.data.synthetic import ZipfMarkov
+from repro.models.quantize import bits_report, quantize_params
+from repro.serving import Engine, perplexity
+from repro.train import loop
+
+cfg = get_arch("tiny-650k")
+print(f"training {cfg.name} ({cfg.param_count()/1e6:.2f}M params)…")
+state, hist = loop.train(cfg, steps=150, batch=32, seq_len=128, log_every=50)
+
+proc = ZipfMarkov(cfg.vocab_size)
+eval_toks = proc.sample(jax.random.PRNGKey(9), 16, 129)
+prompts = proc.sample(jax.random.PRNGKey(10), 8, 32)
+
+for label, qcfg in [
+    ("fp16 baseline", None),
+    ("4-bit float b64 (paper rec.)", QuantConfig(bits=4, dtype="float", block_size=64)),
+    ("4-bit quantile b64", QuantConfig(bits=4, dtype="quantile", block_size=64)),
+    ("3-bit int b1024", QuantConfig(bits=3, dtype="int", block_size=1024)),
+]:
+    params = state.params if qcfg is None else quantize_params(state.params, qcfg, cfg)
+    ppl = perplexity(params, cfg, eval_toks)
+    if qcfg is None:
+        import jax.numpy as jnp
+        nbytes = sum(x.size * 2 for x in jax.tree.leaves(params) if hasattr(x, "size"))
+    else:
+        nbytes = bits_report(params)["total_bits_ideal"] / 8
+    engine = Engine(params, cfg, max_seq_len=96)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, 32)
+    dt = time.perf_counter() - t0
+    print(f"{label:32s} ppl={ppl:8.3f} model={nbytes/1e6:7.2f}MB "
+          f"gen={out.size/dt:7.1f} tok/s")
+print("\nsample continuation (4-bit):", out[0, :16].tolist())

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing.
+
+Design points for 1000+-node operation (DESIGN.md §4):
+  * atomic commits — write to a temp dir, fsync, os.replace; a crash
+    mid-save can never corrupt the latest checkpoint
+  * async saves — the train loop donates a host snapshot and keeps
+    stepping while a background thread serializes
+  * keep-last-N pruning, resume-from-latest
+  * data-iterator state (step counter, rng seed) stored WITH the params so
+    restart is exactly-once over the data stream
+  * topology-free storage: checkpoints are host numpy keyed by pytree
+    path, so a restart may use a different mesh/device count (elastic
+    re-shard happens at load via launch/elastic.py)
+  * SIGTERM preemption hook: final synchronous save on eviction
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(template, flat: dict):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(template):
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt {arr.shape} != template {leaf.shape}")
+        if arr.dtype.kind == "V":  # npz stores bf16 as raw void16 — re-view
+            arr = arr.view(np.dtype(leaf.dtype))
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    # -- save ------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None, *, block=False):
+        flat = _flatten(jax.device_get(tree))  # host snapshot NOW
+        meta = {"step": int(step), "extra": extra or {}}
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def _write(self, step: int, flat: dict, meta: dict):
+        with self._lock:
+            final = self.dir / f"step_{step:010d}"
+            tmp = self.dir / f".tmp_step_{step:010d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **flat)
+            with open(tmp / "meta.json", "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)  # atomic commit
+            self._prune()
+
+    def _prune(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # -- restore ---------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and (p / "meta.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None):
+        """Returns (step, tree, extra) or None if no checkpoint exists."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None
+        d = self.dir / f"step_{step:010d}"
+        with np.load(d / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        with open(d / "meta.json") as f:
+            meta = json.load(f)
+        tree = _unflatten_into(template, flat)
+        return meta["step"], tree, meta["extra"]
+
+
+def install_preemption_hook(save_fn):
+    """On SIGTERM (cluster eviction), run a final synchronous save."""
+
+    def handler(signum, frame):
+        save_fn()
+        raise SystemExit(143)
+
+    signal.signal(signal.SIGTERM, handler)
+    return handler

@@ -1,0 +1,29 @@
+from repro.configs.base import (
+    FP16,
+    SHAPES,
+    ArchConfig,
+    QuantConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED",
+    "ArchConfig",
+    "FP16",
+    "QuantConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "get_arch",
+    "shape_applicable",
+]
+
+
+def __getattr__(name):
+    # lazy: registry imports all arch modules
+    if name in ("ARCHS", "ASSIGNED", "get_arch"):
+        from repro.configs import registry
+
+        return getattr(registry, name)
+    raise AttributeError(name)

@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    chameleon_34b,
+    deepseek_coder_33b,
+    gemma2_27b,
+    h2o_danube_3_4b,
+    jamba_v01_52b,
+    mamba2_130m,
+    moonshot_v1_16b_a3b,
+    phi35_moe_42b_a66b,
+    qwen2_7b,
+    seamless_m4t_large_v2,
+    tiny,
+)
+from repro.configs.base import ArchConfig
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        h2o_danube_3_4b.CONFIG,
+        deepseek_coder_33b.CONFIG,
+        qwen2_7b.CONFIG,
+        gemma2_27b.CONFIG,
+        moonshot_v1_16b_a3b.CONFIG,
+        phi35_moe_42b_a66b.CONFIG,
+        mamba2_130m.CONFIG,
+        jamba_v01_52b.CONFIG,
+        chameleon_34b.CONFIG,
+        seamless_m4t_large_v2.CONFIG,
+    ]
+}
+
+ASSIGNED = list(ARCHS)  # the 10 graded architectures
+
+ARCHS.update(tiny.TINY_FAMILY)  # the paper-family ladder (CPU scaling study)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,35 @@
+"""The paper's own model family, CPU-scale: a ladder of tiny llama-style LMs
+used to build the bit-level scaling laws (stand-in for OPT/Pythia/BLOOM/
+GPT-2, which cannot be downloaded offline — see DESIGN.md §6/§8).
+
+Four sizes spanning ~16x in parameters, trained for a few hundred steps on
+the synthetic Zipf-Markov corpus, then quantized at every (k, dtype, block)
+combination for the scaling-law benchmarks.
+"""
+
+from repro.configs.base import ArchConfig
+
+
+def _tiny(name, n_layers, d_model, n_heads, d_ff, vocab=2048) -> ArchConfig:
+    return ArchConfig(
+        name=name,
+        family="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        head_dim=d_model // n_heads,
+        d_ff=d_ff,
+        vocab_size=vocab,
+        tie_embeddings=True,
+    )
+
+
+TINY_FAMILY = {
+    "tiny-160k": _tiny("tiny-160k", 2, 64, 2, 192),
+    "tiny-650k": _tiny("tiny-650k", 3, 128, 4, 384),
+    "tiny-2.6m": _tiny("tiny-2.6m", 4, 256, 4, 768),
+    "tiny-10m": _tiny("tiny-10m", 6, 448, 8, 1344),
+}
+
+CONFIG = TINY_FAMILY["tiny-2.6m"]

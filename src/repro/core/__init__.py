@@ -1,0 +1,27 @@
+"""Core contribution of Dettmers & Zettlemoyer (ICML 2023): k-bit block-wise
+zero-shot quantization, proxy (outlier-dependent) quantization, the GPTQ
+one-shot baseline, and bit-level scaling-law fitting."""
+
+from repro.core.bits import model_total_bits, quantized_bits_per_param
+from repro.core.blockwise import decode, encode, quantize_dequantize
+from repro.core.codebooks import DATA_TYPES, make_codebook
+from repro.core.qtensor import (
+    QuantizedTensor,
+    dequantize_tensor,
+    quantization_error,
+    quantize_tensor,
+)
+
+__all__ = [
+    "DATA_TYPES",
+    "QuantizedTensor",
+    "decode",
+    "dequantize_tensor",
+    "encode",
+    "make_codebook",
+    "model_total_bits",
+    "quantization_error",
+    "quantize_dequantize",
+    "quantize_tensor",
+    "quantized_bits_per_param",
+]

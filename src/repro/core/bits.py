@@ -1,0 +1,69 @@
+"""Total-model-bits accounting (the paper's x-axis).
+
+Paper accounting (§5.2):
+  bits/param = k                      (codes)
+             + scale_bits / B         (one 16-bit absmax per block)
+             + scale_bits / B         (again, if centering stores a mean)
+             + p * (16 - k)           (proxy quantization, top-p% in 16-bit)
+Non-quantized parameters (norms, biases, embeddings when excluded) count
+16 bits each.
+
+`stored` accounting additionally reflects the uint32 word packing
+(32/floor(32/k) bits per code) — what a deployed checkpoint actually
+occupies on device.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.packing import stored_bits_per_param
+
+
+@dataclass(frozen=True)
+class BitsBreakdown:
+    ideal_bits_per_param: float   # paper accounting
+    stored_bits_per_param: float  # with word-aligned packing
+    code_bits: float
+    scale_bits: float
+    outlier_bits: float
+
+    def total_bits(self, n_params: int) -> float:
+        return self.ideal_bits_per_param * n_params
+
+    def total_stored_bits(self, n_params: int) -> float:
+        return self.stored_bits_per_param * n_params
+
+
+def quantized_bits_per_param(
+    bits: int,
+    block_size: int,
+    *,
+    scale_bits: int = 16,
+    centering: bool = False,
+    outlier_pct: float = 0.0,
+) -> BitsBreakdown:
+    scale = scale_bits / block_size
+    if centering:
+        scale *= 2.0
+    outlier = outlier_pct * (16 - bits)
+    ideal = bits + scale + outlier
+    stored = stored_bits_per_param(bits) + scale + outlier
+    return BitsBreakdown(
+        ideal_bits_per_param=ideal,
+        stored_bits_per_param=stored,
+        code_bits=float(bits),
+        scale_bits=scale,
+        outlier_bits=outlier,
+    )
+
+
+def model_total_bits(
+    n_quantized_params: int,
+    n_fp16_params: int,
+    breakdown: BitsBreakdown,
+    *,
+    stored: bool = False,
+) -> float:
+    per = breakdown.stored_bits_per_param if stored else breakdown.ideal_bits_per_param
+    return per * n_quantized_params + 16.0 * n_fp16_params

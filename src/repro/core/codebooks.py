@@ -1,0 +1,154 @@
+"""Quantization data types ("codebooks") from Dettmers & Zettlemoyer 2023, App. A.
+
+A k-bit data type is fully specified by its codebook: the sorted set F of
+2**k floating-point values in [-1, 1] that the k-bit integer codes map to
+(Q_k^map : I -> F).  Storing the codebook SORTED lets the encoder use
+``searchsorted`` (the paper's "binary search") instead of an O(2^k)
+argmin, and lets kernels use monotone compare-select trees.
+
+Data types:
+  int       -- linear/uniform, symmetric, truncated to +/-(2^(k-1)-1) (§A)
+  float     -- ExMy minifloat, bias 2^(E-1)+1, no NaN/Inf (§A)
+  dynamic   -- dynamic exponent: sign, base-10 zero-run exponent,
+               indicator bit, linear fraction over [0.1, 0.9] (§A)
+  quantile  -- information-theoretically optimal, equal-occupancy bins
+               estimated from the empirical CDF of the tensor (§A, Eq. 6)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+DATA_TYPES = ("int", "float", "dynamic", "quantile")
+
+#: paper App. A: 3-bit exponent for 4..8-bit float, 2-bit for 3-bit float.
+PAPER_EXPONENT_BITS = {3: 2, 4: 3, 5: 3, 6: 3, 7: 3, 8: 3}
+#: paper App. C.4 heuristic: exponent bits = ceil(k/2) works best overall.
+HEURISTIC_EXPONENT_BITS = {3: 2, 4: 2, 5: 3, 6: 3, 7: 4, 8: 4}
+
+
+def _normalize(values: np.ndarray) -> np.ndarray:
+    """Normalize a codebook to absmax 1 and return it sorted, float32."""
+    values = np.asarray(values, dtype=np.float64)
+    m = np.max(np.abs(values))
+    if m > 0:
+        values = values / m
+    return np.sort(values).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def int_codebook(bits: int) -> np.ndarray:
+    """Symmetric linear quantization: codes map to j - (2^(k-1)-1) scaled.
+
+    The set is truncated so positive and negative ranges match (paper §A);
+    with 2^k codes this leaves one duplicate extreme value, matching e.g.
+    Int8 = [-127, 127] with 255 distinct levels.
+    """
+    half = 2 ** (bits - 1) - 1  # e.g. 127 for 8-bit
+    codes = np.arange(2**bits) - half
+    codes = np.clip(codes, -half, half)
+    return _normalize(codes / max(half, 1))
+
+
+@functools.lru_cache(maxsize=None)
+def float_codebook(bits: int, exponent_bits: int | None = None) -> np.ndarray:
+    """ExMy minifloat codebook, bias = 2^(E-1)+1, subnormals, no NaN/Inf."""
+    if exponent_bits is None:
+        exponent_bits = PAPER_EXPONENT_BITS[bits]
+    E = exponent_bits
+    M = bits - 1 - E
+    if M < 0:
+        raise ValueError(f"float{bits} needs >= {E + 1} bits for E={E}")
+    bias = 2 ** (E - 1) + 1
+    values = []
+    for sign in (0, 1):
+        s = -1.0 if sign else 1.0
+        for e in range(2**E):
+            for m in range(2**M):
+                frac = m / (2**M)
+                if e == 0:  # subnormal
+                    v = s * 2.0 ** (1 - bias) * frac
+                else:
+                    v = s * 2.0 ** (e - bias) * (1.0 + frac)
+                values.append(v)
+    return _normalize(values)
+
+
+@functools.lru_cache(maxsize=None)
+def dynamic_codebook(bits: int) -> np.ndarray:
+    """Dynamic exponent data type (Dettmers 2016).
+
+    Bit layout: [sign | z zero bits | indicator 1 | fraction bits].
+    value = sign * 10^-z * frac, frac from bisecting [0.1, 0.9] into the
+    2^w points reachable with w fraction bits.  The all-zero exponent+
+    fraction pattern encodes exactly 0.
+    """
+    values = [0.0]
+    for sign in (1.0, -1.0):
+        for z in range(bits - 1):  # zero-run length before the indicator
+            w = bits - 2 - z  # remaining fraction bits
+            n = 2**w
+            # bisect [0.1, 0.9] into n equal intervals; take midpoints
+            fracs = 0.1 + (0.8 * (np.arange(n) + 0.5) / n)
+            for f in fracs:
+                values.append(sign * (10.0**-z) * f)
+        # pattern with sign bit and all zeros afterwards: +/- smallest
+    # dedupe (0 appears once)
+    values = np.unique(np.asarray(values))
+    # codebook must have exactly 2^k entries: the construction yields
+    # 2 * sum_z 2^(k-2-z) + 1 = 2*(2^(k-1)-1) + 1 = 2^k - 1 values; pad by
+    # duplicating the max (harmless: duplicate codes never win searchsorted)
+    while values.size < 2**bits:
+        values = np.append(values, values.max())
+    return _normalize(values)
+
+
+def quantile_codebook(tensor, bits: int, num_samples: int = 16384) -> jnp.ndarray:
+    """Equal-occupancy (maximum-entropy) codebook from the empirical CDF.
+
+    q_i = (Q_X(i/(2^k+1)) + Q_X((i+1)/(2^k+1))) / 2  (paper Eq. 6), with an
+    explicit 0 added.  Quantiles are estimated on a strided subsample (the
+    SRAM-quantiles approximation) so cost is independent of tensor size.
+    Returns a traced jnp array (data-dependent codebook).
+    """
+    flat = jnp.ravel(tensor).astype(jnp.float32)
+    if flat.size > num_samples:
+        stride = flat.size // num_samples
+        flat = flat[:: stride][:num_samples]
+    n = 2**bits
+    probs = jnp.arange(1, n + 1, dtype=jnp.float32) / (n + 1)
+    qs = jnp.quantile(flat, probs)
+    mids = (qs[:-1] + qs[1:]) / 2.0  # 2^k - 1 midpoints
+    cb = jnp.concatenate([mids, jnp.zeros((1,), jnp.float32)])
+    cb = cb / jnp.maximum(jnp.max(jnp.abs(cb)), 1e-12)
+    return jnp.sort(cb)
+
+
+def make_codebook(
+    dtype: str,
+    bits: int,
+    *,
+    exponent_bits: int | None = None,
+    tensor=None,
+) -> jnp.ndarray:
+    """Build the sorted codebook for a data type. `tensor` required for quantile."""
+    if dtype == "int":
+        return jnp.asarray(int_codebook(bits))
+    if dtype == "float":
+        return jnp.asarray(float_codebook(bits, exponent_bits))
+    if dtype == "dynamic":
+        return jnp.asarray(dynamic_codebook(bits))
+    if dtype == "quantile":
+        if tensor is None:
+            raise ValueError("quantile codebook is data-dependent; pass tensor=")
+        return quantile_codebook(tensor, bits)
+    raise ValueError(f"unknown quantization data type {dtype!r}; want {DATA_TYPES}")
+
+
+def codebook_boundaries(codebook: jnp.ndarray) -> jnp.ndarray:
+    """Decision boundaries (midpoints) for nearest-value encode via searchsorted."""
+    return (codebook[:-1] + codebook[1:]) / 2.0

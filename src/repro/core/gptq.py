@@ -1,0 +1,92 @@
+"""GPTQ (Frantar et al., 2022) — the one-shot quantization baseline.
+
+The paper (Table 1, Figure 5) compares its zero-shot methods against GPTQ,
+so we implement GPTQ too: Optimal Brain Quantization with a per-column
+greedy rounding order and Cholesky-based Hessian updates, optionally with
+block-wise scales (the paper's key finding: GPTQ *needs* blocking to be
+bit-level efficient).
+
+Sizes here are tiny-model scale (the scaling-law study), so this is a
+clear numpy/JAX implementation, not a throughput-optimized one.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.codebooks import codebook_boundaries
+
+
+def _nearest(codebook: np.ndarray, bounds: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return codebook[np.searchsorted(bounds, x)]
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    codebook,
+    *,
+    block_size: int | None = None,
+    percdamp: float = 0.01,
+    update_group: int = 128,
+) -> np.ndarray:
+    """Quantize weight w [in_dim, out_dim] given Hessian H = 2 X X^T [in, in].
+
+    Returns the dequantized weight (the scaling study evaluates models with
+    quantization noise applied; storage uses core/qtensor on the result).
+
+    block_size: if set, each contiguous group of `block_size` input rows
+    (per output column) gets its own absmax scale — the paper's blocking
+    applied to GPTQ.  If None, one scale per column (no blocking).
+    """
+    w = np.array(w, dtype=np.float64).copy()
+    in_dim, out_dim = w.shape
+    H = np.array(hessian, dtype=np.float64).copy()
+
+    codebook = np.asarray(codebook, dtype=np.float64)
+    bounds = np.asarray(codebook_boundaries(codebook), dtype=np.float64)
+
+    # dead inputs: no signal -> weight value irrelevant, zero it
+    dead = np.diag(H) == 0
+    H[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    # dampening (GPTQ step 1)
+    damp = percdamp * np.mean(np.diag(H))
+    H[np.diag_indices(in_dim)] += damp
+
+    # Hinv via Cholesky of the inverse (GPTQ's numerically stable form)
+    Hinv = np.linalg.inv(H)
+    L = np.linalg.cholesky(Hinv)
+    Hinv_chol = L.T  # upper triangular, rows used left-to-right
+
+    # per-column scales: blockwise absmax over input rows (or whole column)
+    bs = block_size or in_dim
+    n_blocks = -(-in_dim // bs)
+
+    Q = np.zeros_like(w)
+    W = w  # working copy, updated in place
+    for b in range(n_blocks):
+        lo, hi = b * bs, min((b + 1) * bs, in_dim)
+        # scale frozen at block entry (zero-shot absmax, matching Eq. 1)
+        scale = np.maximum(np.max(np.abs(W[lo:hi, :]), axis=0), 1e-12)
+        err_block = np.zeros((hi - lo, out_dim))
+        for i in range(lo, hi):
+            d = Hinv_chol[i, i]
+            q = _nearest(codebook, bounds, W[i, :] / scale) * scale
+            Q[i, :] = q
+            err = (W[i, :] - q) / d
+            # rank-1 update of the remaining rows in this block
+            if i + 1 < hi:
+                W[i + 1 : hi, :] -= np.outer(Hinv_chol[i, i + 1 : hi], err)
+            err_block[i - lo, :] = err
+        # propagate the block's accumulated error to all later rows
+        if hi < in_dim:
+            W[hi:, :] -= Hinv_chol[lo:hi, hi:].T @ err_block
+    return Q
+
+
+def hessian_from_inputs(x: np.ndarray) -> np.ndarray:
+    """H = 2 X X^T / n from a calibration mini-batch x [n_samples, in_dim]."""
+    x = np.asarray(x, dtype=np.float64)
+    return 2.0 * (x.T @ x) / x.shape[0]

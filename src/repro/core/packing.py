@@ -1,0 +1,55 @@
+"""Exact k-bit code packing into uint32 words.
+
+Codes (values < 2^k, stored logically as uint8) are packed
+``cpw = floor(32/k)`` per uint32 word.  This is exact for k in {4, 8}
+(8 / 4 codes per word) and wastes ``32 mod k`` bits per word for
+k in {3, 5, 6, 7} (e.g. 3-bit stores 10 codes/word = 3.2 bits/code).
+The *stored* bits/param are reported separately from the paper's ideal
+``k`` in core/bits.py.
+
+Packing is pure jnp (shift/mask), differentiable-free, and shape-
+preserving modulo padding: pack(unpack(x)) == x for valid inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def codes_per_word(bits: int) -> int:
+    return 32 // bits
+
+
+def packed_size(n: int, bits: int) -> int:
+    cpw = codes_per_word(bits)
+    return (n + cpw - 1) // cpw
+
+
+def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack a 1-D array of k-bit codes (any int dtype) into uint32 words."""
+    cpw = codes_per_word(bits)
+    n = codes.shape[-1]
+    n_words = packed_size(n, bits)
+    pad = n_words * cpw - n
+    c = jnp.asarray(codes, jnp.uint32)
+    if pad:
+        c = jnp.concatenate([c, jnp.zeros(c.shape[:-1] + (pad,), jnp.uint32)], -1)
+    c = c.reshape(c.shape[:-1] + (n_words, cpw))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * bits)[None, :]
+    # codes occupy disjoint bit ranges, so a sum equals the bitwise OR
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Unpack uint32 words back to n k-bit codes (uint8)."""
+    cpw = codes_per_word(bits)
+    shifts = jnp.arange(cpw, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    c = (words[..., :, None] >> shifts) & mask
+    c = c.reshape(words.shape[:-1] + (words.shape[-1] * cpw,))
+    return c[..., :n].astype(jnp.uint8)
+
+
+def stored_bits_per_param(bits: int) -> float:
+    """Actual storage cost of one code given the word-aligned packing."""
+    return 32.0 / codes_per_word(bits)

@@ -1,0 +1,34 @@
+"""Outlier-dependent quantization through proxy quantization (paper §3, Eq. 2).
+
+Input-independent outlier detection: the std of each *hidden unit's*
+producing weights (columns of the previous linear layer) is a proxy for
+whether that hidden dimension carries outlier features.  The top-p%
+dimensions are kept in 16-bit in every weight that CONSUMES that hidden
+state; the rest are quantized to k-bit.
+
+The cost is p*(16-k) extra bits per parameter (§5.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hidden_unit_std(w_producer: jnp.ndarray) -> jnp.ndarray:
+    """std over the input dim for each output unit of the producing weight.
+
+    w_producer: [h_in, h_out]  ->  std: [h_out]
+    """
+    return jnp.std(w_producer.astype(jnp.float32), axis=0)
+
+
+def outlier_indices(std: jnp.ndarray, pct: float) -> jnp.ndarray:
+    """Top-p% hidden units by producer-weight std (Eq. 2), sorted ascending."""
+    h = std.shape[-1]
+    k = max(1, int(round(h * pct)))
+    return outlier_indices_topk(std, k)
+
+
+def outlier_indices_topk(std: jnp.ndarray, k: int) -> jnp.ndarray:
+    top = jnp.argsort(-std, axis=-1)[..., :k]
+    return jnp.sort(top, axis=-1).astype(jnp.int32)

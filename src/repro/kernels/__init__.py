@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's perf-critical layer: fused k-bit
+dequantize-matmul (the memory-bound decode hot spot) and blockwise encode.
+`ops` holds the jit'd wrappers; `ref` the pure-jnp oracles."""
+
+from repro.kernels.ops import (
+    operand_from_qtensor,
+    prepare_operand,
+    qmatmul,
+    quantize_blocks,
+)
+from repro.kernels.ref import QMatmulOperand, qmatmul_ref
+
+__all__ = [
+    "QMatmulOperand",
+    "operand_from_qtensor",
+    "prepare_operand",
+    "qmatmul",
+    "qmatmul_ref",
+    "quantize_blocks",
+]

@@ -1,0 +1,128 @@
+"""jit'd public wrappers around the Pallas kernels: operand preparation
+(padding/alignment), QuantizedTensor interop, and dispatch between the
+kernel (TPU) and the pure-jnp reference (CPU / dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockwise, packing
+from repro.core.codebooks import make_codebook
+from repro.core.qtensor import QuantizedTensor
+from repro.kernels import qmatmul as qk
+from repro.kernels import quantize as quantk
+from repro.kernels.ref import QMatmulOperand, qmatmul_ref, quantize_blocks_ref
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def prepare_operand(
+    w: jnp.ndarray,
+    *,
+    bits: int,
+    dtype: str = "float",
+    block_size: int = 64,
+    exponent_bits=None,
+) -> QMatmulOperand:
+    """Quantize a dense weight [K, N] into kernel layout (blocks along K)."""
+    K, N = w.shape
+    cb = make_codebook(dtype, bits, exponent_bits=exponent_bits, tensor=w)
+    q = blockwise.encode(w.T, cb, block_size)  # blocks run along K per column
+    codes = q.codes.reshape(N, K)
+    packed = jax.vmap(lambda c: packing.pack(c, bits))(codes)
+    scales = q.scales.reshape(N, K // block_size)
+    return QMatmulOperand(
+        packed=packed, scales=scales, codebook=cb,
+        bits=bits, block_size=block_size, k_dim=K, dtype_name=dtype,
+    )
+
+
+def operand_from_qtensor(qt: QuantizedTensor) -> QMatmulOperand:
+    """View a transposed-stored 2-D QuantizedTensor as kernel operands.
+    Structured QTs are already in kernel layout; flat ones are reshaped."""
+    assert qt.transposed and len(qt.quant_shape) == 2, "need [N, K] storage"
+    N, K = qt.quant_shape
+    cpw = 32 // qt.bits
+    assert K % cpw == 0, "K must align to the packing word"
+    return QMatmulOperand(
+        packed=qt.packed.reshape(N, K // cpw),
+        scales=qt.scales.reshape(N, K // qt.block_size),
+        codebook=qt.codebook,
+        bits=qt.bits,
+        block_size=qt.block_size,
+        k_dim=K,
+        dtype_name=qt.dtype_name,
+    )
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    op: QMatmulOperand,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+):
+    """y = x @ W, x [..., K] -> [..., N].  Pads M/N/K to tile alignment."""
+    if not use_kernel:
+        lead = x.shape[:-1]
+        y = qmatmul_ref(x.reshape(-1, x.shape[-1]), op)
+        return y.reshape(lead + (y.shape[-1],))
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    M, K = x2.shape
+    N = op.packed.shape[0]
+    cpw = 32 // op.bits
+
+    bk = _lcm(cpw, op.block_size)
+    Kp = -(-K // bk) * bk
+    bm_eff = min(bm, max(8, 8 * (-(-M // 8))))
+    Mp = -(-M // bm_eff) * bm_eff
+    bn_eff = min(bn, N)
+    Np = -(-N // bn_eff) * bn_eff
+
+    xp = jnp.pad(x2, ((0, Mp - M), (0, Kp - K)))
+    packed = jnp.pad(op.packed, ((0, Np - N), (0, (Kp - K) // cpw)))
+    scales = jnp.pad(op.scales, ((0, Np - N), (0, (Kp - K) // op.block_size)))
+
+    y = qk.qmatmul_pallas(
+        xp, packed, scales, op.codebook,
+        bits=op.bits, block_size=op.block_size, dtype_name=op.dtype_name,
+        bm=bm_eff, bn=bn_eff, bk=bk, interpret=interpret,
+    )
+    return y[:M, :N].reshape(lead + (N,))
+
+
+def quantize_blocks(
+    x: jnp.ndarray,
+    codebook: jnp.ndarray,
+    block_size: int,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """Blockwise encode of a flat tensor -> (codes [n_blocks, B], scales)."""
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n_blocks = -(-flat.shape[0] // block_size)
+    pad = n_blocks * block_size - flat.shape[0]
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    xb = flat.reshape(n_blocks, block_size)
+    if not use_kernel:
+        return quantize_blocks_ref(xb, codebook)
+    tile = 256
+    while n_blocks % tile:
+        tile //= 2
+    codes, scales = quantk.quantize_blocks_pallas(
+        xb, codebook, tile_blocks=max(tile, 1), interpret=interpret
+    )
+    return codes, scales[:, 0]

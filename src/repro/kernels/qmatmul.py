@@ -1,0 +1,136 @@
+"""Fused k-bit dequantize + matmul Pallas TPU kernel.
+
+The paper's premise: small-batch inference latency is proportional to the
+bytes of weights streamed from HBM (§2.1).  This kernel therefore streams
+PACKED k-bit codes (uint32 words) + 16-bit per-block scales into VMEM —
+k/16 of the bf16 traffic — dequantizes tile-by-tile on the VPU, and feeds
+the MXU with bf16/f32 tiles.
+
+Layout (matches models/quantize.py transposed storage; see DESIGN.md §3):
+  x       [M, K]            activations (bf16/f32)
+  packed  [N, K//cpw]       uint32, cpw = 32//bits codes per word along K
+  scales  [N, K//B]         per-(column, K-block) absmax constants
+  codebook[1, 2**bits]      sorted data-type codebook
+  out     [M, N]            f32-accumulated, cast to x.dtype
+
+Grid (M/bm, N/bn, K/bk), K innermost with an f32 VMEM accumulator.
+bk must be a multiple of lcm(cpw, B) so packed words and scale blocks
+never straddle a tile.
+
+Dequantization on TPU (DESIGN.md §3 — no gather):
+  * `int` data type: pure arithmetic (codes are affine in the value).
+  * LUT types (float/dynamic/quantile): compare-accumulate select tree
+    over the 2**bits codebook entries — vectorized VPU selects, no
+    serializing gathers.  Fine for k <= 5 (<= 32 selects); for k in {6,8}
+    prefer the int path or expect dequant-bound tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_tile(words, bits: int, bk: int):
+    """uint32 [bn, bk//cpw] -> uint32 codes [bn, bk]."""
+    cpw = 32 // bits
+    shifts = jnp.arange(cpw, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    c = (words[:, :, None] >> shifts[None, None, :]) & mask
+    return c.reshape(words.shape[0], bk)
+
+
+def _dequant_codes(codes, codebook_row, bits: int, dtype_name: str):
+    """codes uint32 [bn, bk] -> values f32 [bn, bk] (no gathers)."""
+    if dtype_name == "int":
+        half = float(2 ** (bits - 1) - 1)
+        v = codes.astype(jnp.float32) - half
+        return jnp.clip(v, -half, half) / half
+    vals = jnp.zeros(codes.shape, jnp.float32)
+    for j in range(2**bits):
+        vals = jnp.where(codes == j, codebook_row[j], vals)
+    return vals
+
+
+def _qmatmul_kernel(x_ref, w_ref, s_ref, cb_ref, o_ref, acc_ref, *,
+                    bits, block_size, dtype_name, bk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_tile(w_ref[...], bits, bk)          # [bn, bk]
+    vals = _dequant_codes(codes, cb_ref[0], bits, dtype_name)
+    scales = s_ref[...].astype(jnp.float32)             # [bn, bk//B]
+    scales = jnp.repeat(scales, block_size, axis=1)     # [bn, bk]
+    wt = vals * scales
+    x = x_ref[...].astype(jnp.float32)                  # [bm, bk]
+    acc_ref[...] += jax.lax.dot_general(
+        x, wt, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmatmul_pallas(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scales: jnp.ndarray,
+    codebook: jnp.ndarray,
+    *,
+    bits: int,
+    block_size: int,
+    dtype_name: str = "float",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled fused dequant-matmul. Shapes must already be tile-aligned
+    (ops.py pads).  x [M,K]; packed [N,K//cpw]; scales [N,K//B]."""
+    M, K = x.shape
+    N = packed.shape[0]
+    cpw = 32 // bits
+    if bk is None:
+        lcm = _lcm(cpw, block_size)
+        bk = lcm
+        while bk < 256 and (bk * 2) <= K and K % (bk * 2) == 0:
+            bk *= 2
+    assert bk % cpw == 0 and bk % block_size == 0, (bk, cpw, block_size)
+    assert K % bk == 0 and M % bm == 0 and N % bn == 0, (M, K, N, bm, bn, bk)
+
+    cb2 = codebook.reshape(1, -1).astype(jnp.float32)
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(
+        _qmatmul_kernel, bits=bits, block_size=block_size,
+        dtype_name=dtype_name, bk=bk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk // cpw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // block_size), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, 2**bits), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, packed, scales, cb2)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)

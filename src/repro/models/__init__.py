@@ -1,0 +1,6 @@
+from repro.models import attention, blocks, layers, lm, moe, quantize, seq2seq, sharding, ssm
+
+__all__ = [
+    "attention", "blocks", "layers", "lm", "moe", "quantize", "seq2seq",
+    "sharding", "ssm",
+]

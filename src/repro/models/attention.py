@@ -1,0 +1,289 @@
+"""Attention: GQA with RoPE, sliding windows, logit softcaps, QK-norm.
+
+Two execution regimes:
+
+* train / prefill — ``flash_attention``: q is processed in statically
+  sliced chunks (python loop, so causal/window KV ranges are exact static
+  slices — no wasted FLOPs on fully-masked blocks), with an online-softmax
+  lax.scan over KV chunks inside.  The 32k x 32k score matrix never
+  materializes.
+* decode — ``decode_attention_partial`` computes flash-decoding partial
+  (max, denom, weighted-values) statistics over a LOCAL slice of the KV
+  cache; ``combine_partials`` merges them (psum'd over the `model` axis by
+  the sharded wrapper in models/sharding.py).  This makes the KV cache
+  sequence-shardable with no head-count divisibility constraints.
+
+The KV cache is a dict {"k","v": [B, S_c, K, Dh], "pos": [S_c] int32} where
+``pos[slot]`` is the absolute position held in that slot (-1 = empty).
+Full caches write slot=position; sliding-window caches are ring buffers
+(slot = position %% window) — the pos array makes masking identical for
+both and is what lets danube/gemma2-local decode with O(window) memory.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, init_dense, rmsnorm, softcap
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], D, H * Dh, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], D, K * Dh, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], D, K * Dh, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], H * Dh, D, scale=(H * Dh) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((Dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.zeros((Dh,), jnp.float32)}
+    return p
+
+
+def project_qkv(params, x, cfg, positions):
+    """x [B,S,D] -> q [B,S,H,Dh], k,v [B,S,K,Dh] with RoPE applied."""
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, S, H, Dh)
+    k = dense(params["wk"], x).reshape(B, S, K, Dh)
+    v = dense(params["wv"], x).reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"]["scale"])
+        k = rmsnorm(k, params["k_norm"]["scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# flash attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def _chunk_attend(q, k, v, q_pos, k_pos, *, causal, window, cap, sm_scale):
+    """One (q-chunk, kv-chunk) tile: masked scores + softmax pieces.
+
+    q [B,cq,K,G,Dh]; k,v [B,ck,K,Dh]; returns (m [B,K,G,cq], p@v, sum_p).
+    Scores accumulate in f32 (MXU preferred type); p is cast back to the
+    kv dtype for the pv matmul (standard flash practice).
+    """
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+    s = s * sm_scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(valid[None, None, None, :, :], s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1), NEG_INF / 2)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, None, :, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return m, l, pv
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    q_start: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    cap: float = 0.0,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+):
+    """Chunked online-softmax attention.
+
+    q [B,Sq,H,Dh] ; k,v [B,Skv,K,Dh] (GQA: H = K*G). q_start: absolute
+    position of q[0] relative to k[0] (train/prefill: 0).
+    Static per-q-chunk KV ranges skip fully-masked blocks exactly.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = Dh**-0.5
+    chunk_q = min(chunk_q, Sq)
+    chunk_kv = min(chunk_kv, Skv)
+    qg = q.reshape(B, Sq, K, G, Dh)
+
+    outs = []
+    n_q_chunks = -(-Sq // chunk_q)
+    for iq in range(n_q_chunks):
+        qs, qe = iq * chunk_q, min(Sq, (iq + 1) * chunk_q)
+        cq = qe - qs
+        q_chunk = qg[:, qs:qe]
+        q_pos = q_start + qs + jnp.arange(cq)
+        # static KV range for this q chunk
+        hi = min(Skv, q_start + qe) if causal else Skv
+        lo = max(0, q_start + qs - window + 1) if window else 0
+        lo = (lo // chunk_kv) * chunk_kv
+        hi = min(Skv, -(-hi // chunk_kv) * chunk_kv)
+        n_kv = (hi - lo) // chunk_kv
+
+        if n_kv <= 0:
+            outs.append(jnp.zeros((B, cq, K, G, Dh), q.dtype))
+            continue
+
+        k_slab = jax.lax.dynamic_slice_in_dim(k, lo, n_kv * chunk_kv, axis=1)
+        v_slab = jax.lax.dynamic_slice_in_dim(v, lo, n_kv * chunk_kv, axis=1)
+        k_slab = k_slab.reshape(B, n_kv, chunk_kv, K, Dh)
+        v_slab = v_slab.reshape(B, n_kv, chunk_kv, K, Dh)
+        kpos0 = lo + jnp.arange(n_kv)[:, None] * chunk_kv + jnp.arange(chunk_kv)[None, :]
+
+        def body(carry, xs):
+            m, l, acc = carry
+            k_c, v_c, k_pos = xs
+            m_c, l_c, pv_c = _chunk_attend(
+                q_chunk, k_c, v_c, q_pos, k_pos,
+                causal=causal, window=window, cap=cap, sm_scale=sm_scale,
+            )
+            m_new = jnp.maximum(m, m_c)
+            a = jnp.exp(m - m_new)
+            b = jnp.exp(m_c - m_new)
+            l = l * a + l_c * b
+            acc = acc * a[..., None] + pv_c * b[..., None]
+            return (m_new, l, acc), None
+
+        # remat per KV tile: without this, differentiating the scan stores
+        # every [B,K,G,cq,ckv] probability tile — O(S^2) bwd memory.  With
+        # it, bwd memory is O(S) carries and tiles are recomputed.
+        body = jax.checkpoint(body)
+
+        m0 = jnp.full((B, K, G, cq), NEG_INF / 2, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (k_slab.swapaxes(0, 1), v_slab.swapaxes(0, 1), kpos0)
+        )
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,K,G,cq,Dh]
+        outs.append(o.transpose(0, 3, 1, 2, 4).astype(q.dtype))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, Sq, H, Dh)
+
+
+# --------------------------------------------------------------------------
+# KV cache + decode
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> dict:
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, K, Dh), dtype),
+        "v": jnp.zeros((batch, cache_len, K, Dh), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def cache_slot(pos, cache_len: int, window: int):
+    """Ring slot for window caches, identity otherwise. pos may be traced."""
+    if window and window <= cache_len:
+        return pos % cache_len
+    return pos
+
+
+def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0) -> dict:
+    """Write one token's K/V at absolute position `pos` (traced scalar)."""
+    S_c = cache["k"].shape[1]
+    slot = cache_slot(pos, S_c, window)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new[:, None], slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new[:, None], slot, axis=1)
+    p = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.asarray(pos, jnp.int32)[None], slot, axis=0
+    )
+    return {"k": k, "v": v, "pos": p}
+
+
+def write_cache_prefill(cache: dict, k_seq, v_seq, *, window: int = 0) -> dict:
+    """Write a prefilled sequence [B,S,K,Dh] into slots [0..S) (or the ring)."""
+    B, S = k_seq.shape[:2]
+    S_c = cache["k"].shape[1]
+    if window and window <= S_c and S > S_c:
+        # keep only the last S_c positions, ring-aligned
+        keep = S_c
+        k_seq, v_seq = k_seq[:, -keep:], v_seq[:, -keep:]
+        positions = jnp.arange(S - keep, S, dtype=jnp.int32)
+        slots = positions % S_c
+        order = jnp.argsort(slots)
+        k = cache["k"].at[:, slots[order]].set(k_seq[:, order])
+        v = cache["v"].at[:, slots[order]].set(v_seq[:, order])
+        p = cache["pos"].at[slots[order]].set(positions[order])
+        return {"k": k, "v": v, "pos": p}
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_seq, 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_seq, 0, axis=1)
+    p = cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))
+    return {"k": k, "v": v, "pos": p}
+
+
+def decode_attention_partial(q, k_cache, v_cache, pos_arr, pos, *, cap=0.0, window=0):
+    """Flash-decoding partials over a local cache slice.
+
+    q [B,H,Dh]; k_cache,v_cache [B,S_loc,K,Dh]; pos_arr [S_loc] absolute
+    positions (-1 empty).  Returns (m, l, pv): [B,K,G], [B,K,G], [B,K,G,Dh].
+    Combine across slices with `combine_partials`.
+    """
+    B, H, Dh = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    # bf16 operands with f32 MXU accumulation — no f32 cache copies
+    # (EXPERIMENTS.md §Perf iteration 3)
+    qg = q.reshape(B, K, G, Dh)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (Dh**-0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = (pos_arr >= 0) & (pos_arr <= pos)
+    if window:
+        valid &= pos_arr > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1), NEG_INF / 2)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return m, l, pv
+
+
+def combine_partials(m, l, pv, axis_name: str | None):
+    """Merge flash-decoding partials; psum over `axis_name` when sharded."""
+    if axis_name is None:
+        o = pv / jnp.maximum(l, 1e-30)[..., None]
+        return o
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    pv_g = jax.lax.psum(pv * corr[..., None], axis_name)
+    return pv_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def decode_attention(q, cache, pos, *, cap=0.0, window=0):
+    """Unsharded single-token attention against a cache (CPU/test path)."""
+    m, l, pv = decode_attention_partial(
+        q, cache["k"], cache["v"], cache["pos"], pos, cap=cap, window=window
+    )
+    B, H, Dh = q.shape
+    o = combine_partials(m, l, pv, None)
+    return o.reshape(B, H, Dh).astype(q.dtype)

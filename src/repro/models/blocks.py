@@ -1,0 +1,275 @@
+"""Layer composition: (mixer, ffn) blocks and the period-scan over depth.
+
+Layers are grouped into the architecture's smallest repeating period
+(ArchConfig.scan_period): dense llama = 1, gemma2 local/global = 2,
+jamba = 8 (1 attn + 7 mamba, MoE every 2nd).  Params for each position in
+the period are stacked over n_periods = n_layers / period, and the stack
+is traversed with ONE lax.scan — compile time is O(period), not O(depth)
+(deepseek's 62 layers compile as 31 scans of a 2-layer period... period 1;
+62 iterations of 1 position).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import activation, dense, init_dense, init_norm, norm
+
+
+# --------------------------------------------------------------------------
+# FFN (dense MLP)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], D, F),
+        "w_up": init_dense(ks[1], D, F),
+        "w_down": init_dense(ks[2], F, D, scale=F**-0.5),
+    }
+
+
+def mlp(params, x, cfg, constrain):
+    h = activation(dense(params["w_gate"], x), cfg.act) * dense(params["w_up"], x)
+    h = constrain(h, "ffn_hidden")
+    return dense(params["w_down"], h)
+
+
+# --------------------------------------------------------------------------
+# one layer position
+# --------------------------------------------------------------------------
+
+def init_layer(key, mixer: str, ffn: str, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"mixer_norm": init_norm(cfg.d_model, cfg.norm_type)}
+    if mixer.startswith("attn"):
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg)
+    else:
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg)
+    if ffn is not None:
+        p["ffn_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg) if ffn == "moe" else init_mlp(ks[1], cfg)
+    if cfg.post_block_norm:
+        p["post_mixer_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+        if ffn is not None:
+            p["post_ffn_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+    return p
+
+
+def _mixer_window(mixer: str, cfg) -> int:
+    if mixer == "attn_local" or (mixer == "attn" and cfg.sliding_window):
+        return cfg.sliding_window
+    return 0
+
+
+def init_layer_cache(mixer: str, cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    if mixer.startswith("attn"):
+        w = _mixer_window(mixer, cfg)
+        eff = min(cache_len, w) if w else cache_len
+        return attn_mod.init_kv_cache(cfg, batch, eff, dtype)
+    return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+
+
+def apply_layer_seq(
+    p, x, *, mixer, ffn, cfg, constrain, positions, q_pad=None, write_cache=False,
+    cache_len=None,
+):
+    """Sequence mode (train / prefill). Returns (x, cache_out, aux)."""
+    aux = {}
+    cache_out = None
+    h = norm(p["mixer_norm"], x, cfg.norm_type)
+    if mixer.startswith("attn"):
+        window = _mixer_window(mixer, cfg)
+        q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions)
+        H = cfg.n_heads
+        if q_pad and q_pad != H:
+            # zero-pad q heads so heads shard evenly over TP (DESIGN.md §4);
+            # dummy heads attend uniformly and are sliced away below.
+            B, S, _, Dh = q.shape
+            q = jnp.concatenate(
+                [q, jnp.zeros((B, S, q_pad - H, Dh), q.dtype)], axis=2
+            )
+        q = constrain(q, "heads")
+        k = constrain(k, "kv_heads")
+        v = constrain(v, "kv_heads")
+        o = attn_mod.flash_attention(
+            q, k, v, causal=True, window=window, cap=cfg.attn_logit_softcap
+        )
+        if q_pad and q_pad != H:
+            o = o[:, :, :H, :]
+        o = o.reshape(x.shape[0], x.shape[1], -1)
+        o = dense(p["mixer"]["wo"], o)
+        if write_cache:
+            B, S = x.shape[:2]
+            w = _mixer_window(mixer, cfg)
+            total = max(cache_len or S, S)
+            eff = min(total, w) if w else total
+            cache = attn_mod.init_kv_cache(cfg, B, eff, k.dtype)
+            cache_out = attn_mod.write_cache_prefill(cache, k, v, window=w)
+    else:
+        o, tail = ssm_mod.ssm_block(p["mixer"], h, cfg, constrain=constrain)
+        if write_cache:
+            cache_out = tail
+    if cfg.post_block_norm:
+        o = norm(p["post_mixer_norm"], o, cfg.norm_type)
+    x = x + o
+    x = constrain(x, "residual")
+
+    if ffn is not None:
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        if ffn == "moe":
+            o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg, constrain)
+        else:
+            o = mlp(p["ffn"], h, cfg, constrain)
+        if cfg.post_block_norm:
+            o = norm(p["post_ffn_norm"], o, cfg.norm_type)
+        x = x + o
+        x = constrain(x, "residual")
+    return x, cache_out, aux
+
+
+def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_attn):
+    """Single-token mode. x [B,D]; returns (x, new_cache)."""
+    h = norm(p["mixer_norm"], x, cfg.norm_type)
+    if mixer.startswith("attn"):
+        window = _mixer_window(mixer, cfg)
+        positions = jnp.asarray(pos, jnp.int32)[None]
+        q, k, v = attn_mod.project_qkv(p["mixer"], h[:, None, :], cfg, positions)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        o, cache = decode_attn(
+            q, k, v, cache, pos, cap=cfg.attn_logit_softcap, window=window
+        )
+        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], -1))
+    else:
+        o, cache = ssm_mod.ssm_block_decode(p["mixer"], h, cache, cfg)
+    if cfg.post_block_norm:
+        o = norm(p["post_mixer_norm"], o, cfg.norm_type)
+    x = x + o
+
+    if ffn is not None:
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        if ffn == "moe":
+            o, _ = moe_mod.moe_ffn(p["ffn"], h[:, None, :], cfg, constrain)
+            o = o[:, 0]
+        else:
+            o = mlp(p["ffn"], h, cfg, constrain)
+        if cfg.post_block_norm:
+            o = norm(p["post_ffn_norm"], o, cfg.norm_type)
+        x = x + o
+    return x, cache
+
+
+def local_decode_attn(q, k_new, v_new, cache, pos, *, cap, window):
+    """Unsharded cache write + attend (CPU/tests; sharded version in
+    models/sharding.py)."""
+    cache = attn_mod.write_cache_decode(cache, k_new, v_new, pos, window=window)
+    o = attn_mod.decode_attention(q, cache, pos, cap=cap, window=window)
+    return o, cache
+
+
+# --------------------------------------------------------------------------
+# the period scan
+# --------------------------------------------------------------------------
+
+def init_stack(key, cfg) -> list:
+    """Stacked params: list (one per period position) of pytrees whose
+    leaves carry a leading n_periods axis."""
+    period = cfg.scan_period()
+    sched = cfg.layer_schedule()[:period]
+    n_periods = cfg.n_layers // period
+    stack = []
+    for j, (mixer, ffn_kind) in enumerate(sched):
+        keys = jax.random.split(jax.random.fold_in(key, j), n_periods)
+        per = [init_layer(k, mixer, ffn_kind if cfg.d_ff or cfg.n_experts else None, cfg)
+               for k in keys]
+        stack.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return stack
+
+
+def stack_schedule(cfg) -> list:
+    period = cfg.scan_period()
+    sched = cfg.layer_schedule()[:period]
+    return [
+        (m, (f if (cfg.d_ff or cfg.n_experts) else None)) for (m, f) in sched
+    ]
+
+
+def apply_stack_seq(stack, x, cfg, *, constrain, positions, q_pad=None,
+                    write_cache=False, cache_len=None, remat=False):
+    """Run all layers in sequence mode. Returns (x, caches, aux_sum)."""
+    sched = stack_schedule(cfg)
+
+    def period_body(carry, xs):
+        x, aux_sum = carry
+        caches_out = []
+        for j, (mixer, ffn_kind) in enumerate(sched):
+            x, cache_out, aux = apply_layer_seq(
+                xs[j], x,
+                mixer=mixer, ffn=ffn_kind, cfg=cfg, constrain=constrain,
+                positions=positions, q_pad=q_pad, write_cache=write_cache,
+                cache_len=cache_len,
+            )
+            caches_out.append(cache_out)
+            aux_sum = aux_sum + aux.get("moe_aux", 0.0)
+        return (x, aux_sum), tuple(caches_out)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux_sum), caches = jax.lax.scan(body, (x, 0.0), tuple(stack))
+    return x, caches, aux_sum
+
+
+def apply_stack_decode(stack, x, caches, pos, cfg, *, constrain, decode_attn):
+    """Run all layers in decode mode. caches: tuple (per position) of
+    stacked cache pytrees. Returns (x, new_caches).
+
+    Caches travel in the scan CARRY with dynamic_index updates at the
+    period index — NOT as scan xs/ys, which would write the entire cache
+    stack back every token (a full-cache HBM pass per decoded token;
+    EXPERIMENTS.md §Perf iteration 1)."""
+    sched = stack_schedule(cfg)
+
+    def period_body(carry, xs):
+        x, caches = carry
+        params, idx = xs
+        caches = list(caches)
+        for j, (mixer, ffn_kind) in enumerate(sched):
+            cache_j = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+                caches[j],
+            )
+            x, c = apply_layer_decode(
+                params[j], x, cache_j, pos,
+                mixer=mixer, ffn=ffn_kind, cfg=cfg, constrain=constrain,
+                decode_attn=decode_attn,
+            )
+            caches[j] = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, idx, 0),
+                caches[j], c,
+            )
+        return (x, tuple(caches)), None
+
+    n_periods = cfg.n_layers // cfg.scan_period()
+    (x, new_caches), _ = jax.lax.scan(
+        period_body, (x, caches),
+        (tuple(stack), jnp.arange(n_periods, dtype=jnp.int32)),
+    )
+    return x, new_caches
+
+
+def init_stack_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Cache pytree matching apply_stack_decode's xs structure."""
+    period = cfg.scan_period()
+    sched = stack_schedule(cfg)
+    n_periods = cfg.n_layers // period
+    caches = []
+    for mixer, _ in sched:
+        one = init_layer_cache(mixer, cfg, batch, cache_len, dtype)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), one))
+    return tuple(caches)

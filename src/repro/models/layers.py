@@ -1,0 +1,133 @@
+"""Shared building blocks: norms, RoPE, activations, and `linear` — the one
+matmul entry point that transparently accepts either a plain 16-bit weight
+or a k-bit `QuantizedTensor` (the paper's technique as a first-class
+feature: any weight in any model can be swapped for its quantized form).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QuantizedTensor, dequantize_tensor
+
+
+# --------------------------------------------------------------------------
+# linear / quantized linear
+# --------------------------------------------------------------------------
+
+def linear(x: jnp.ndarray, w, bias=None) -> jnp.ndarray:
+    """y = x @ w (+ bias).
+
+    `w` is either a jnp array [in, out] or a QuantizedTensor storing the
+    TRANSPOSED weight (quant_shape == (out, in)): transposed storage makes
+    the block axis the reduction dim (kernel layout, DESIGN.md §3) and the
+    16-bit dequant transient is consumed immediately by the einsum.
+    """
+    if isinstance(w, QuantizedTensor):
+        wt = dequantize_tensor(w, out_dtype=x.dtype)  # [out, in]
+        y = jnp.einsum("...k,nk->...n", x, wt)
+    else:
+        y = x @ w.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def weight_shape(w) -> tuple:
+    """Logical [in, out] shape of a (possibly quantized) weight."""
+    if isinstance(w, QuantizedTensor):
+        out_d, in_d = w.quant_shape[-2:]
+        return (in_d, out_d)
+    return tuple(w.shape[-2:])
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(params: dict, x: jnp.ndarray, norm_type: str) -> jnp.ndarray:
+    if norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def init_norm(d: int, norm_type: str) -> dict:
+    p = {"scale": jnp.zeros((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+def activation(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma2 logit softcapping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (broadcastable)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # [half]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if x.shape[-1] > 2 * half:  # odd head_dim (danube 120 is even; safety)
+        rot = jnp.concatenate([rot, x[..., 2 * half :]], axis=-1)
+    return rot.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None):
+    s = scale if scale is not None else d_in**-0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * s}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(x, params["w"], params.get("b"))

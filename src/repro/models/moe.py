@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Dispatch is scatter/gather (token -> (expert, slot) indices computed via a
+cumulative position-in-expert), NOT a dense one-hot einsum: a one-hot
+dispatch contraction costs O(T*E*C*D) fake FLOPs that would swamp the HLO
+compute roofline (DESIGN.md).  Experts are sharded over the `model` mesh
+axis (expert parallelism); the scatter into the [E, C, D] buffer is the
+token all-to-all under GSPMD.
+
+Router is kept in 16-bit even under quantization (it is tiny and
+routing is precision-sensitive); expert matrices are exactly the paper's
+memory-bound quantization sweet spot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QuantizedTensor, dequantize_tensor
+from repro.models.layers import activation, linear
+
+
+def _materialize(w, dtype):
+    """Dense [E, in, out] view of an expert stack (QT stores [E, out, in])."""
+    if isinstance(w, QuantizedTensor):
+        return dequantize_tensor(w, out_dtype=dtype).swapaxes(-1, -2)
+    return w.astype(dtype)
+
+
+def init_moe(key, cfg) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    s_in, s_out = D**-0.5, F**-0.5
+    return {
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (E, D, F), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (E, D, F), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (E, F, D), jnp.float32) * s_out,
+    }
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8 for TPU layouts
+
+
+def _n_groups(T: int) -> int:
+    """GShard-style dispatch groups: token locality made explicit so GSPMD
+    keeps gathers/scatters shard-local instead of replicating the [T*k, D]
+    dispatch (75-111 GB/dev at 32k prefill — EXPERIMENTS.md §Perf cell 2).
+    Group count matches the dp mesh width; 1 for tiny test shapes."""
+    return 16 if T % 16 == 0 and T >= 256 else 1
+
+
+def moe_ffn(params, x, cfg, constrain=lambda t, kind: t):
+    """x [B,S,D] -> [B,S,D] (+aux loss dict). `constrain` applies sharding."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _n_groups(T)
+    Tg = T // G
+    xt = constrain(x.reshape(G, Tg, D), "moe_groups")
+
+    logits = linear(xt, params["router"]).astype(jnp.float32)  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [G,Tg,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # per-group position of each (token, choice) within its expert
+    C = capacity(Tg, cfg)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # [G,Tg,k,E]
+    flat = onehot.reshape(G, Tg * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # exclusive prefix count
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Tg, k)
+    keep = pos < C  # dropped beyond capacity (standard switch behavior)
+
+    e_flat = expert_idx.reshape(G, Tg * k)
+    p_flat = jnp.where(keep, pos, C).reshape(G, Tg * k)  # overflow -> row C
+    tok_id = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k)
+    )
+
+    # dispatch: per-group scatter into expert buffers [G, E, C+1, D]
+    def dispatch(xg, eg, pg, tg):
+        buf = jnp.zeros((E, C + 1, D), x.dtype)
+        return buf.at[eg, pg].set(xg[tg], mode="drop")
+
+    buf = jax.vmap(dispatch)(xt, e_flat, p_flat, tok_id)
+    buf = constrain(buf, "expert_buffer4")
+    work = buf[:, :, :C, :]  # [G,E,C,D]
+
+    # expert computation (SwiGLU / GeGLU per cfg.act)
+    w_gate = _materialize(params["w_gate"], x.dtype)
+    w_up = _materialize(params["w_up"], x.dtype)
+    w_down = _materialize(params["w_down"], x.dtype)
+    h = activation(
+        jnp.einsum("gecd,edf->gecf", work, w_gate), cfg.act
+    ) * jnp.einsum("gecd,edf->gecf", work, w_up)
+    h = constrain(h, "expert_hidden4")
+    out = jnp.einsum("gecf,efd->gecd", h, w_down)
+    out = constrain(out, "expert_buffer4")
+    out = jnp.concatenate([out, jnp.zeros((G, E, 1, D), out.dtype)], axis=2)
+
+    # combine: gather each token's k expert outputs, weight by gates
+    gathered = jax.vmap(lambda og, eg, pg: og[eg, pg])(out, e_flat, p_flat)
+    gathered = gathered.reshape(G, Tg, k, D)
+    w = jnp.where(keep, gate_vals, 0.0).astype(x.dtype)
+    y = jnp.sum(gathered * w[..., None], axis=2)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0].reshape(-1), E, dtype=jnp.float32),
+        axis=0,
+    )
+    frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, D), {"moe_aux": aux}
+
+
+def moe_ffn_quantized_weights(params):
+    """Leaves that the quantizer should treat as expert matrices."""
+    return ["w_gate", "w_up", "w_down"]

@@ -1,0 +1,206 @@
+"""Post-training quantization of a model parameter tree (the paper's
+zero-shot setting: quantize weights directly, no data, no optimization).
+
+Policy (paper §4): every parameter MATRIX is quantized to k-bit — attention
+projections, FFN, SSM in/out projections, MoE expert matrices, lm_head.
+Vectors (norms, biases, conv filters, SSM scalars) and the MoE router stay
+16-bit; embeddings stay 16-bit by default (both switchable).
+
+2-D weights [In, Out] are stored TRANSPOSED in the QuantizedTensor
+([Out, In]) so quantization blocks run along the reduction dim — the
+Pallas kernel layout (DESIGN.md §3); the paper's bits accounting is
+unchanged by the layout.
+
+Proxy quantization (§3, Eq. 2): producer-weight std picks the outlier
+input dims kept in 16-bit.  Within-block producers are exact (w_down <-
+w_up, wo <- wv with GQA group tiling); residual-stream consumers share one
+model-wide outlier set J_residual from the mean producer std across layers
+(emergent outliers are global across layers — Dettmers et al. 2022a); this
+adaptation is noted in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core.proxy import outlier_indices_topk
+from repro.core.qtensor import QuantizedTensor, quantize_tensor, to_structured
+
+#: module names whose {"w": ...} consumes the residual stream [D -> *]
+_RESIDUAL_CONSUMERS = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "frame_proj"}
+
+
+def _n_outliers(dim: int, pct: float) -> int:
+    return max(1, int(round(dim * pct))) if pct > 0 else 0
+
+
+def _quantize_matrix(w, qcfg: QuantConfig, outlier_idx=None):
+    """w [..., In, Out] -> QT storing [..., Out, In], blocks along In."""
+    wt = jnp.swapaxes(w, -1, -2)
+    return to_structured(quantize_tensor(
+        wt,
+        bits=qcfg.bits,
+        dtype=qcfg.dtype,
+        block_size=qcfg.block_size,
+        batch_dims=wt.ndim - 2,
+        centering=qcfg.centering,
+        exponent_bits=qcfg.exponent_bits,
+        outlier_idx=outlier_idx,
+        outlier_axis=-1,
+        transposed=True,
+    ))
+
+
+def _producer_std(w) -> jnp.ndarray:
+    """std over the input dim for each output unit; w [..., In, Out] -> [..., Out]."""
+    return jnp.std(w.astype(jnp.float32), axis=-2)
+
+
+def _bc(idx, batch_shape):
+    if idx is None:
+        return None
+    return jnp.broadcast_to(idx, tuple(batch_shape) + idx.shape[-1:])
+
+
+def residual_outliers(params: dict, cfg, pct: float):
+    """Model-wide outlier dims of the residual stream -> [n_out] or None."""
+    if pct <= 0:
+        return None
+    stds = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if "w" in keys and any(k in ("w_down", "wo", "out_proj") for k in keys):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.shape[-1] == cfg.d_model:
+                stds.append(_producer_std(leaf).reshape(-1, cfg.d_model).mean(0))
+    if not stds:
+        return None
+    mean_std = jnp.mean(jnp.stack(stds), axis=0)
+    return outlier_indices_topk(mean_std, _n_outliers(cfg.d_model, pct))
+
+
+def _module_outliers(name: str, module: dict, container: dict, cfg, qcfg, j_res):
+    """Outlier input-dim indices for a dense module's weight (or None)."""
+    if qcfg.outlier_pct <= 0:
+        return None
+    w = module["w"]
+    batch_shape = w.shape[:-2]
+    if name in _RESIDUAL_CONSUMERS and w.shape[-2] == cfg.d_model:
+        return _bc(j_res, batch_shape)
+    if name == "w_down" and "w_up" in container:
+        std = _producer_std(container["w_up"]["w"])  # [..., F]
+        return outlier_indices_topk(std, _n_outliers(w.shape[-2], qcfg.outlier_pct))
+    if name == "wo" and "wv" in container:
+        std = _producer_std(container["wv"]["w"])  # [..., K*Dh]
+        if cfg.n_heads and cfg.n_kv_heads and cfg.n_heads != cfg.n_kv_heads:
+            g = cfg.n_heads // cfg.n_kv_heads
+            std = jnp.repeat(
+                std.reshape(batch_shape + (cfg.n_kv_heads, cfg.head_dim)), g, axis=-2
+            ).reshape(batch_shape + (cfg.n_heads * cfg.head_dim,))
+        # map producer unit j to consumer input dim j (identity layout)
+        return outlier_indices_topk(std, _n_outliers(w.shape[-2], qcfg.outlier_pct))
+    if name == "lm_head" and w.shape[-2] == cfg.d_model:
+        return _bc(j_res, batch_shape)
+    return None
+
+
+def quantize_params(params, qcfg: QuantConfig, cfg):
+    """Params tree -> same tree with weight matrices as QuantizedTensors."""
+    j_res = residual_outliers(params, cfg, qcfg.outlier_pct)
+
+    def walk(tree):
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for name, val in tree.items():
+            # dense module {"w": matrix, ("b": bias)}
+            if (
+                isinstance(val, dict)
+                and "w" in val
+                and hasattr(val["w"], "ndim")
+                and val["w"].ndim >= 2
+            ):
+                oidx = _module_outliers(name, val, tree, cfg, qcfg, j_res)
+                q = dict(val)
+                q["w"] = _quantize_matrix(val["w"], qcfg, outlier_idx=oidx)
+                out[name] = q
+            # MoE expert stacks: raw arrays [n_p, E, In, Out]
+            elif name in ("w_gate", "w_up", "w_down") and hasattr(val, "ndim") and val.ndim == 4:
+                oidx = None
+                if qcfg.outlier_pct > 0:
+                    if name == "w_down" and "w_up" in tree:
+                        std = _producer_std(tree["w_up"])
+                        oidx = outlier_indices_topk(
+                            std, _n_outliers(val.shape[-2], qcfg.outlier_pct)
+                        )
+                    elif j_res is not None and val.shape[-2] == cfg.d_model:
+                        oidx = _bc(j_res, val.shape[:2])
+                out[name] = _quantize_matrix(val, qcfg, outlier_idx=oidx)
+            elif name == "lm_head" and qcfg.quantize_lm_head and hasattr(val, "ndim"):
+                # stored [V, D] == (out, in): already kernel layout
+                oidx = j_res[None] if j_res is not None else None
+                out[name] = to_structured(quantize_tensor(
+                    val, bits=qcfg.bits, dtype=qcfg.dtype,
+                    block_size=qcfg.block_size, batch_dims=0,
+                    centering=qcfg.centering, exponent_bits=qcfg.exponent_bits,
+                    outlier_idx=oidx, outlier_axis=-1,
+                ))
+            elif name == "embed" and qcfg.quantize_embedding and hasattr(val, "ndim"):
+                out[name] = to_structured(quantize_tensor(
+                    val, bits=qcfg.bits, dtype=qcfg.dtype,
+                    block_size=qcfg.block_size, batch_dims=0,
+                    centering=qcfg.centering, exponent_bits=qcfg.exponent_bits,
+                ))
+            else:
+                out[name] = walk(val)
+        return out
+
+    return walk(params)
+
+
+def bits_report(qparams) -> dict:
+    """Total-model-bits accounting over a quantized tree (paper's x-axis)."""
+    q_bits = q_stored = 0.0
+    q_params = fp_params = 0
+    for leaf in jax.tree_util.tree_leaves(
+        qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ):
+        if isinstance(leaf, QuantizedTensor):
+            bd = leaf.bits_breakdown()
+            q_bits += bd.ideal_bits_per_param * leaf.n_params
+            q_stored += bd.stored_bits_per_param * leaf.n_params
+            q_params += leaf.n_params
+        elif hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            fp_params += leaf.size
+    total = q_bits + 16.0 * fp_params
+    n = max(q_params + fp_params, 1)
+    return {
+        "quantized_params": q_params,
+        "fp16_params": fp_params,
+        "total_bits_ideal": total,
+        "total_bits_stored": q_stored + 16.0 * fp_params,
+        "avg_bits_per_param": total / n,
+    }
+
+
+def dequantize_params(qparams):
+    """Round-trip a quantized tree back to dense weights (the "noise lens"):
+    scaling-law evals run the ORIGINAL fp model code on these weights."""
+    from repro.core.qtensor import dequantize_tensor
+
+    def one(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            w = dequantize_tensor(leaf, out_dtype=jnp.float32)
+            # transposed-stored matrices go back to [In, Out]; lm_head/embed
+            # are stored untransposed ([V, D]) and must stay that way
+            if leaf.transposed:
+                return jnp.swapaxes(w, -1, -2)
+            return w
+        return leaf
+
+    return jax.tree.map(
+        one, qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )

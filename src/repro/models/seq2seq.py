@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Audio frontend is a STUB per the assignment: `encode` consumes precomputed
+frame embeddings [B, S, d_model].  Encoder = bidirectional self-attn
+stack; decoder = causal self-attn + cross-attn + FFN, with a self KV cache
+and a cross KV cache (computed once at prefill) for decoding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import blocks
+from repro.models.layers import dense, init_dense, init_norm, norm
+from repro.models.lm import NO_CONSTRAIN, logits_from_hidden
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "mixer_norm": init_norm(cfg.d_model, cfg.norm_type),
+            "mixer": attn_mod.init_attention(kk[0], cfg),
+            "ffn_norm": init_norm(cfg.d_model, cfg.norm_type),
+            "ffn": blocks.init_mlp(kk[1], cfg),
+        }
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "self_norm": init_norm(cfg.d_model, cfg.norm_type),
+            "self_attn": attn_mod.init_attention(kk[0], cfg),
+            "cross_norm": init_norm(cfg.d_model, cfg.norm_type),
+            "cross_attn": attn_mod.init_attention(kk[1], cfg),
+            "ffn_norm": init_norm(cfg.d_model, cfg.norm_type),
+            "ffn": blocks.init_mlp(kk[2], cfg),
+        }
+
+    enc = [enc_layer(k) for k in jax.random.split(ks[0], cfg.n_encoder_layers)]
+    dec = [dec_layer(k) for k in jax.random.split(ks[1], cfg.n_layers)]
+    return {
+        "frame_proj": init_dense(ks[2], cfg.d_model, cfg.d_model),
+        "enc_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_final_norm": init_norm(cfg.d_model, cfg.norm_type),
+        "embed": jax.random.normal(ks[3], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "dec_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+        "lm_head": jax.random.normal(ks[4], (cfg.vocab_size, cfg.d_model), jnp.float32)
+        * cfg.d_model**-0.5,
+    }
+
+
+# --------------------------------------------------------------------------
+# encoder
+# --------------------------------------------------------------------------
+
+def encode(params, frames, cfg, *, constrain=NO_CONSTRAIN, remat=False):
+    """frames [B,S,D] (stub embeddings) -> memory [B,S,D]."""
+    x = dense(params["frame_proj"], frames.astype(jnp.bfloat16))
+    x = constrain(x, "residual")
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, p):
+        h = norm(p["mixer_norm"], x, cfg.norm_type)
+        q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions)
+        q = constrain(q, "heads")
+        o = attn_mod.flash_attention(q, k, v, causal=False)
+        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], S, -1))
+        x = constrain(x + o, "residual")
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        x = constrain(x + blocks.mlp(p["ffn"], h, cfg, constrain), "residual")
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_stack"])
+    return norm(params["enc_final_norm"], x, cfg.norm_type)
+
+
+# --------------------------------------------------------------------------
+# decoder, sequence mode (train / prefill)
+# --------------------------------------------------------------------------
+
+def _cross_kv(p_attn, memory, cfg):
+    B, S_m, _ = memory.shape
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    k = dense(p_attn["wk"], memory).reshape(B, S_m, K, Dh)
+    v = dense(p_attn["wv"], memory).reshape(B, S_m, K, Dh)
+    return k, v
+
+
+def decoder_seq(params, tokens, memory, cfg, *, constrain=NO_CONSTRAIN,
+                write_cache=False, remat=False):
+    """tokens [B,T] -> hidden [B,T,D] (+ caches if write_cache)."""
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = constrain(x, "residual")
+    B, T = tokens.shape
+    positions = jnp.arange(T, dtype=jnp.int32)
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, p):
+        # self attention (causal)
+        h = norm(p["self_norm"], x, cfg.norm_type)
+        q, k, v = attn_mod.project_qkv(p["self_attn"], h, cfg, positions)
+        o = attn_mod.flash_attention(q, k, v, causal=True)
+        x = constrain(x + dense(p["self_attn"]["wo"], o.reshape(B, T, -1)), "residual")
+        cache = None
+        if write_cache:
+            c = attn_mod.init_kv_cache(cfg, B, cfg.decoder_cache_len, k.dtype)
+            cache = attn_mod.write_cache_prefill(c, k[:, -cfg.decoder_cache_len:],
+                                                 v[:, -cfg.decoder_cache_len:])
+        # cross attention (no mask)
+        h = norm(p["cross_norm"], x, cfg.norm_type)
+        qx = dense(p["cross_attn"]["wq"], h).reshape(B, T, H, Dh)
+        kx, vx = _cross_kv(p["cross_attn"], memory, cfg)
+        ox = attn_mod.flash_attention(qx, kx, vx, causal=False)
+        x = constrain(x + dense(p["cross_attn"]["wo"], ox.reshape(B, T, -1)), "residual")
+        # ffn
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        x = constrain(x + blocks.mlp(p["ffn"], h, cfg, constrain), "residual")
+        return x, (cache, (kx, vx) if write_cache else None)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["dec_stack"])
+    x = norm(params["final_norm"], x, cfg.norm_type)
+    return x, caches
+
+
+def loss_fn(params, frames, tokens, labels, cfg, *, constrain=NO_CONSTRAIN,
+            remat=True):
+    memory = encode(params, frames, cfg, constrain=constrain, remat=remat)
+    h, _ = decoder_seq(params, tokens, memory, cfg, constrain=constrain, remat=remat)
+    logits = logits_from_hidden(params, h, cfg).astype(jnp.float32)
+    logits = constrain(logits, "logits")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def prefill(params, frames, bos_tokens, cfg, *, constrain=NO_CONSTRAIN):
+    """Encode source; run decoder over BOS prefix; return (logits, caches)."""
+    memory = encode(params, frames, cfg, constrain=constrain)
+    h, caches = decoder_seq(
+        params, bos_tokens, memory, cfg, constrain=constrain, write_cache=True
+    )
+    logits = logits_from_hidden(params, h[:, -1], cfg)
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg, *, constrain=NO_CONSTRAIN,
+                decode_attn=blocks.local_decode_attn):
+    """token [B]; caches = (self_cache, (kx, vx)) stacked over layers."""
+    x = params["embed"].astype(jnp.bfloat16)[token]
+    B = x.shape[0]
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, xs):
+        p, (self_cache, cross_kv) = xs
+        kx, vx = cross_kv
+        h = norm(p["self_norm"], x, cfg.norm_type)
+        positions = jnp.asarray(pos, jnp.int32)[None]
+        q, k, v = attn_mod.project_qkv(p["self_attn"], h[:, None, :], cfg, positions)
+        o, self_cache = decode_attn(q[:, 0], k[:, 0], v[:, 0], self_cache, pos,
+                                    cap=0.0, window=0)
+        x = x + dense(p["self_attn"]["wo"], o.reshape(B, -1))
+        h = norm(p["cross_norm"], x, cfg.norm_type)
+        qx = dense(p["cross_attn"]["wq"], h).reshape(B, H, Dh)
+        cross_cache = {"k": kx, "v": vx,
+                       "pos": jnp.arange(kx.shape[1], dtype=jnp.int32)}
+        ox = attn_mod.decode_attention(qx, cross_cache, kx.shape[1] + 1)
+        x = x + dense(p["cross_attn"]["wo"], ox.reshape(B, -1))
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        x = x + blocks.mlp(p["ffn"], h, cfg, constrain)
+        return x, (self_cache, cross_kv)
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_stack"], caches))
+    x = norm(params["final_norm"], x, cfg.norm_type)
+    return logits_from_hidden(params, x, cfg), new_caches

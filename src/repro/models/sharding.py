@@ -1,0 +1,345 @@
+"""Sharding policy: maps model params / activations / caches onto the
+production mesh ("pod", "data", "model").
+
+Training / prefill
+  * batch -> ("pod","data")  (DP across pods, DP+FSDP inside a pod)
+  * weights: column-parallel over "model" (TP) + FSDP over "data"
+    (GSPMD all-gathers per scan step == ZeRO-3); replicated across pods
+  * attention: heads over "model".  Archs whose head count is not
+    divisible by the TP degree (deepseek 56H, qwen2 28H) get ZERO-PADDED
+    q-heads up to the next multiple of lcm(tp, kv) — 14% extra attention
+    FLOPs, visible in the roofline's MODEL_FLOPS/HLO ratio, in exchange
+    for exact-causal chunked attention and uniform head-TP (the
+    context-parallel alternative is discussed in DESIGN.md).
+  * MoE: experts over "model" (EP)
+
+Decode
+  * KV cache SEQUENCE-sharded over "model" (and over "data"/"pod" too when
+    the batch is too small to fill them, e.g. long_500k batch=1); attention
+    uses flash-decoding partials combined with psum inside shard_map — no
+    kv-head divisibility constraints, cache memory scales with the mesh.
+  * quantized weights: packed/scale arrays sharded over their flat last
+    dim on "model" == column-parallel (contiguous rows per chip).
+
+Without a mesh every method is a no-op, so model code is identical on CPU.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.qtensor import QuantizedTensor
+from repro.models import attention as attn_mod
+
+_COL_MODULES = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "frame_proj", "router"}
+_ROW_MODULES = {"wo", "w_down", "out_proj"}
+
+
+def _maybe(axis, dim_size, axis_size):
+    """Use `axis` only if it divides the dim."""
+    if axis is None:
+        return None
+    return axis if dim_size % axis_size == 0 else None
+
+
+class Sharder:
+    def __init__(self, mesh: Mesh | None, cfg, *, fsdp: bool = True,
+                 replicate_params_below: int = 400_000_000):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.fsdp = fsdp
+        if mesh is None:
+            self.dp_axes = ()
+            self.tp = None
+            self.tp_size = 1
+            self.dp_size = 1
+            self.replicate = True
+            return
+        names = mesh.axis_names
+        self.tp = "model"
+        self.dp_axes = tuple(n for n in names if n != "model")
+        self.tp_size = mesh.shape["model"]
+        self.dp_size = math.prod(mesh.shape[n] for n in self.dp_axes)
+        # small models: replicating weights beats TP overhead
+        n_params = cfg.param_count()
+        self.replicate = n_params * 2 < replicate_params_below
+        self.fsdp_axis = "data" if (fsdp and not self.replicate) else None
+
+    # -- helpers ---------------------------------------------------------
+    def _ns(self, *spec):
+        return NamedSharding(self.mesh, P(*spec))
+
+    @property
+    def dp(self):
+        return self.dp_axes if self.dp_axes else None
+
+    def head_pad(self) -> int:
+        """q-head count padded so heads are TP- and GQA-divisible."""
+        cfg = self.cfg
+        if not cfg.n_heads:
+            return 0
+        if self.mesh is None or self.replicate:
+            return cfg.n_heads
+        K = max(cfg.n_kv_heads, 1)
+        h = cfg.n_heads
+        while h % K or h % self.tp_size:
+            h += 1
+        return h
+
+    # -- activation constraints -------------------------------------------
+    def constrain(self, x, kind: str):
+        if self.mesh is None:
+            return x
+        tp = None if self.replicate else self.tp
+        dp = self.dp
+        spec = {
+            "residual": (dp, None, None),
+            "heads": (dp, None, tp, None),
+            "kv_heads": (dp, None, None, None),
+            "ffn_hidden": (dp, None, tp),
+            "logits": (dp, None, tp),
+            "expert_buffer": (tp, None, None),
+            "expert_hidden": (tp, None, None),
+            "moe_groups": (dp, None, None),       # [G,Tg,D] group-local tokens
+            "expert_buffer4": (dp, tp, None, None),  # [G,E,C,D]
+            "expert_hidden4": (dp, tp, None, None),
+            "ssm_heads": (dp, None, tp, None),   # [B,S,H,P] SSD head shard
+            "ssm_dt": (dp, None, tp),            # [B,S,H]
+            "ssm_bc": (dp, None, None, None),    # [B,S,G,N] small, replicated
+            "ssd_intra": (dp, None, None, None, tp),  # [B,n,Q,Q,H]
+            "ssd_bn": (dp, None, None, tp, None),     # [B,n,Q,H,N]
+        }.get(kind)
+        if spec is None or len(spec) != x.ndim:
+            return x
+        # drop axes that do not divide
+        fixed = tuple(
+            _maybe(a, x.shape[i], self._axis_size(a)) for i, a in enumerate(spec)
+        )
+        return jax.lax.with_sharding_constraint(x, self._ns(*fixed))
+
+    def _axis_size(self, a):
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            return math.prod(self.mesh.shape[n] for n in a)
+        return self.mesh.shape[a]
+
+    # -- parameter specs ---------------------------------------------------
+    def param_spec_tree(self, params):
+        """NamedSharding tree for a (possibly quantized) params tree."""
+
+        def spec_for(path, leaf):
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            return self._leaf_spec(keys, leaf)
+
+        return jax.tree_util.tree_map_with_path(
+            spec_for, params, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+        )
+
+    def _leaf_spec(self, keys, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return self._qt_spec(keys, leaf)
+        if self.mesh is None:
+            return None
+        if self.replicate or leaf.ndim == 0:
+            return self._ns()
+        tp, fs = self.tp, self.fsdp_axis
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        shape = leaf.shape
+
+        if name in ("embed", "lm_head"):
+            return self._ns(_maybe(tp, shape[0], self.tp_size),
+                            _maybe(fs, shape[1], self._axis_size(fs)))
+        if "ffn" in keys and name in ("w_gate", "w_up", "w_down") and leaf.ndim == 4:
+            # MoE experts [n_p, E, In, Out] -> EP over model + FSDP on In
+            return self._ns(None, _maybe(tp, shape[1], self.tp_size),
+                            _maybe(fs, shape[2], self._axis_size(fs)), None)
+        if name == "router":
+            return self._ns()
+        if name == "w" and leaf.ndim >= 2:
+            owner = next(
+                (k for k in reversed(keys[:-1]) if isinstance(k, str)), ""
+            )
+            lead = (None,) * (leaf.ndim - 2)
+            i, o = shape[-2], shape[-1]
+            if owner in _ROW_MODULES:
+                return self._ns(*lead, _maybe(tp, i, self.tp_size),
+                                _maybe(fs, o, self._axis_size(fs)))
+            return self._ns(*lead, _maybe(fs, i, self._axis_size(fs)),
+                            _maybe(tp, o, self.tp_size))
+        if name == "b" and leaf.ndim >= 1:
+            lead = (None,) * (leaf.ndim - 1)
+            return self._ns(*lead, _maybe(tp, leaf.shape[-1], self.tp_size))
+        if name == "conv_w" and leaf.ndim >= 2:
+            lead = (None,) * (leaf.ndim - 2)
+            return self._ns(*lead, None,
+                            _maybe(tp, leaf.shape[-1], self.tp_size))
+        return self._ns()
+
+    def _qt_spec(self, keys, qt: QuantizedTensor):
+        """Quantized leaves: output-row column-parallelism over `model`.
+        Structured storage shards the explicit row dim (-2); flat storage
+        shards the flat dim (contiguous rows) when it divides."""
+        if self.mesh is None:
+            return jax.tree.map(lambda _: None, qt)
+        import dataclasses as _dc
+
+        tp = None if self.replicate else self.tp
+        nb = len(qt.batch_shape)
+        # MoE expert stacks have TWO batch dims [n_p, E, ...]; dense stacked
+        # weights have one [n_p, ...] and must NOT take the expert branch
+        is_expert = nb == 2
+
+        def leaf_spec(a, shardable=True, structured_leaf=False):
+            if a is None:
+                return None
+            lead = [None] * a.ndim
+            if is_expert:
+                # [n_p, E, ...] -> shard experts over model (EP)
+                if qt.batch_shape[-1] % self.tp_size == 0:
+                    lead[nb - 1] = tp
+                return self._ns(*lead)
+            if shardable and tp is not None:
+                out_rows = qt.quant_shape[0]
+                if structured_leaf and a.ndim >= 2:
+                    if out_rows % self.tp_size == 0:
+                        lead[-2] = tp
+                elif a.ndim >= 1:
+                    if out_rows % self.tp_size == 0 and a.shape[-1] % self.tp_size == 0:
+                        lead[-1] = tp
+            return self._ns(*lead)
+
+        st = qt.structured
+        return _dc.replace(
+            qt,
+            packed=leaf_spec(qt.packed, structured_leaf=st),
+            scales=leaf_spec(qt.scales, structured_leaf=st),
+            means=leaf_spec(qt.means, structured_leaf=st),
+            codebook=leaf_spec(qt.codebook, shardable=False),
+            outlier_vals=leaf_spec(qt.outlier_vals, shardable=False),
+            outlier_idx=leaf_spec(qt.outlier_idx, shardable=False),
+        )
+
+    # -- caches ------------------------------------------------------------
+    def decode_plan(self, batch: int):
+        """(batch_axes, seq_axes) for the KV cache at this batch size."""
+        if self.mesh is None:
+            return None, None
+        usable = []
+        rem = batch
+        for a in self.dp_axes:
+            if rem % self.mesh.shape[a] == 0:
+                usable.append(a)
+                rem //= self.mesh.shape[a]
+        batch_axes = tuple(usable) or None
+        # seq gets "model" plus any dp axis not absorbed by the batch
+        seq_axes = tuple(a for a in self.mesh.axis_names if a not in usable)
+        return batch_axes, seq_axes
+
+    def cache_spec_tree(self, caches, batch: int):
+        if self.mesh is None:
+            return jax.tree.map(lambda _: None, caches)
+        b_ax, s_ax = self.decode_plan(batch)
+        tp = None if self.replicate else self.tp
+
+        def spec(path, leaf):
+            keys = [getattr(k, "key", None) for k in path]
+            if "k" in keys or "v" in keys:
+                # [n_p, B, S, K, Dh]
+                s = _maybe(s_ax, leaf.shape[2], self._axis_size(s_ax))
+                return self._ns(None, b_ax, s, None, None)
+            if "pos" in keys:
+                s = _maybe(s_ax, leaf.shape[1], self._axis_size(s_ax))
+                return self._ns(None, s)
+            if "state" in keys:  # [n_p, B, H, P, N]
+                h = _maybe(tp, leaf.shape[2], self.tp_size)
+                return self._ns(None, b_ax, h, None, None)
+            if "conv" in keys:  # [n_p, B, cw-1, conv_dim]
+                c = _maybe(tp, leaf.shape[3], self.tp_size)
+                return self._ns(None, b_ax, None, c)
+            return self._ns()
+
+        return jax.tree_util.tree_map_with_path(spec, caches)
+
+    # -- sharded decode attention ------------------------------------------
+    def decode_attn_fn(self, batch: int, cache_len: int | None = None):
+        """A decode_attn callable (blocks.apply_layer_decode signature):
+        shard_map flash-decoding over the sequence-sharded cache.  Falls
+        back to the local path per-call when a cache length does not
+        divide the seq shards (e.g. tiny ring caches)."""
+        if self.mesh is None or self.replicate:
+            from repro.models.blocks import local_decode_attn
+
+            return local_decode_attn
+
+        b_ax, s_ax = self.decode_plan(batch)
+        s_size = self._axis_size(s_ax)
+        mesh = self.mesh
+
+        def fn(q, k_new, v_new, cache, pos, *, cap, window):
+            S_total = cache["k"].shape[1]
+            if S_total % s_size != 0:
+                from repro.models.blocks import local_decode_attn
+
+                return local_decode_attn(
+                    q, k_new, v_new, cache, pos, cap=cap, window=window
+                )
+
+            def local(q, k_new, v_new, k, v, pos_arr, pos):
+                S_loc = k.shape[1]
+                # global slot of this write
+                slot = pos % S_total if (window and window <= S_total) else pos
+                offset = _shard_offset(s_ax, mesh) * S_loc
+                lp = slot - offset
+                ok = (lp >= 0) & (lp < S_loc)
+                lpc = jnp.clip(lp, 0, S_loc - 1)
+                kcur = jax.lax.dynamic_slice_in_dim(k, lpc, 1, 1)
+                vcur = jax.lax.dynamic_slice_in_dim(v, lpc, 1, 1)
+                k = jax.lax.dynamic_update_slice_in_dim(
+                    k, jnp.where(ok, k_new[:, None], kcur), lpc, 1)
+                v = jax.lax.dynamic_update_slice_in_dim(
+                    v, jnp.where(ok, v_new[:, None], vcur), lpc, 1)
+                pcur = jax.lax.dynamic_slice_in_dim(pos_arr, lpc, 1, 0)
+                pos_arr = jax.lax.dynamic_update_slice_in_dim(
+                    pos_arr,
+                    jnp.where(ok, jnp.asarray(pos, jnp.int32)[None], pcur), lpc, 0)
+                m, l, pv = attn_mod.decode_attention_partial(
+                    q, k, v, pos_arr, pos, cap=cap, window=window)
+                o = attn_mod.combine_partials(m, l, pv, s_ax)
+                return o.astype(q.dtype), k, v, pos_arr
+
+            Pb = P(b_ax)
+            o, k, v, pa = jax.shard_map(
+                local, mesh=mesh,
+                in_specs=(P(b_ax, None, None), P(b_ax, None, None),
+                          P(b_ax, None, None),
+                          P(b_ax, s_ax, None, None), P(b_ax, s_ax, None, None),
+                          P(s_ax), P()),
+                out_specs=(P(b_ax, None, None), P(b_ax, s_ax, None, None),
+                           P(b_ax, s_ax, None, None), P(s_ax)),
+                check_vma=False,
+            )(q, k_new, v_new, cache["k"], cache["v"], cache["pos"],
+              jnp.asarray(pos, jnp.int32))
+            B, H, Dh = q.shape
+            return o.reshape(B, H, Dh), {"k": k, "v": v, "pos": pa}
+
+        return fn
+
+
+def _shard_offset(s_ax, mesh):
+    """Linear index of this shard along the (possibly tuple) seq axes."""
+    if isinstance(s_ax, str):
+        return jax.lax.axis_index(s_ax)
+    idx = 0
+    for a in s_ax:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def no_sharder(cfg):
+    return Sharder(None, cfg)

@@ -1,0 +1,279 @@
+"""Mamba-2 / SSD (state-space duality) selective state-space block.
+
+Used by mamba2-130m (all layers) and jamba-v0.1 (7 of every 8 layers; Jamba
+ships Mamba-1 — we realize it with the SSD formulation of the same
+selective-SSM family, see DESIGN.md §5).
+
+Train/prefill uses the chunked SSD algorithm (quadratic within chunks of
+length Q, linear scan across chunks); decode is the O(1) recurrence
+
+    h_t = h_{t-1} * exp(dt_t A) + dt_t * (B_t x_t^T) ;  y_t = C_t . h_t + D x_t
+
+`ssd_reference` is the naive per-step oracle the chunked path is tested
+against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rmsnorm
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def in_proj_dim(cfg) -> int:
+    # [z, x, B, C, dt]
+    return 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.n_ssm_heads
+
+
+def init_ssm(key, cfg) -> dict:
+    D = cfg.d_model
+    H = cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(ks[0], D, in_proj_dim(cfg)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim(cfg)), jnp.float32)
+        * (cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_dim(cfg),), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H, dtype=jnp.float32))),
+        "norm": {"scale": jnp.zeros((cfg.d_inner,), jnp.float32)},
+        "out_proj": init_dense(ks[2], cfg.d_inner, D, scale=cfg.d_inner**-0.5),
+    }
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None,
+                constrain=lambda t, kind: t):
+    """Chunked SSD scan.
+
+    x [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (negative);
+    Bm, Cm [B,S,G,N].  Returns y [B,S,H,P], final_state [B,H,P,N].
+
+    The intra-chunk tensors (CB, seg, W: [B, n, Q, Q, H]) are explicitly
+    head-sharded: the group->head `repeat` would otherwise launder the
+    sharding and replicate ~8 GB/op at 32k context (EXPERIMENTS.md §Perf).
+    """
+    Bb, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by ssd chunk {Q}"
+    n = S // Q
+
+    xc = x.reshape(Bb, n, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, n, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bb, n, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bb, n, Q, G, N).astype(jnp.float32)
+    # broadcast groups to heads
+    Bh = constrain(jnp.repeat(Bc, rep, axis=3), "ssd_bn")  # [B,n,Q,H,N]
+    Ch = constrain(jnp.repeat(Cc, rep, axis=3), "ssd_bn")
+
+    la = dtc * A[None, None, None, :]  # log decay per step, <= 0
+    cs = jnp.cumsum(la, axis=2)  # inclusive cumsum within chunk
+
+    # intra-chunk (diagonal) term
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,n,q,s,H] = cum_i - cum_j
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = constrain(
+        jnp.where(tri[None, None, :, :, None], seg, -jnp.inf), "ssd_intra")
+    CB = constrain(jnp.einsum("bnqhN,bnshN->bnqsh", Ch, Bh), "ssd_intra")
+    W = constrain(CB * jnp.exp(seg) * dtc[:, :, None, :, :], "ssd_intra")
+    y_diag = jnp.einsum("bnqsh,bnshp->bnqhp", W, xc)
+
+    # chunk-final states: sum_j exp(cs_Q - cs_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [B,n,Q,H]
+    state_chunk = jnp.einsum(
+        "bnqh,bnqhN,bnqhp->bnhpN", decay_to_end * dtc, Bh, xc
+    )
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # [B,n,H]
+    if initial_state is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def body(h, inp):
+        dec, s_new = inp  # dec [B,H], s_new [B,H,P,N]
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_new
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body, h0, (chunk_decay.swapaxes(0, 1), state_chunk.swapaxes(0, 1))
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)  # [B,n,H,P,N] state entering each chunk
+
+    # inter-chunk (off-diagonal) contribution
+    y_off = jnp.einsum("bnqhN,bnhpN->bnqhp", Ch, h_prevs) * jnp.exp(cs)[..., None]
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, initial_state=None):
+    """Naive per-step recurrence oracle (tests)."""
+    Bb, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    h = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dec = jnp.exp(dt_t * A)  # [B,H]
+        h = h * dec[:, :, None, None] + jnp.einsum(
+            "bh,bhN,bhp->bhpN", dt_t, B_t, x_t
+        )
+        y = jnp.einsum("bhN,bhpN->bhp", C_t, h)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step,
+        h,
+        (
+            x.swapaxes(0, 1).astype(jnp.float32),
+            dt.swapaxes(0, 1).astype(jnp.float32),
+            Bh.swapaxes(0, 1),
+            Ch.swapaxes(0, 1),
+        ),
+    )
+    return ys.swapaxes(0, 1), h
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence. state [B,H,P,N]; x_t [B,H,P]; dt_t [B,H];
+    B_t, C_t [B,G,N] -> y [B,H,P], new state."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dec = jnp.exp(dt_t.astype(jnp.float32) * A)
+    state = state * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhN,bhp->bhpN", dt_t.astype(jnp.float32), Bh, x_t.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhN,bhpN->bhp", Ch, state)
+    return y, state
+
+
+# --------------------------------------------------------------------------
+# full block (prefill/train and decode)
+# --------------------------------------------------------------------------
+
+def _split_in_proj(zxbcdt, cfg):
+    Di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :Di]
+    xbc = zxbcdt[..., Di : Di + Di + 2 * G * N]
+    dt = zxbcdt[..., Di + Di + 2 * G * N :]
+    return z, xbc, dt
+
+
+def _split_conv_out(xbc, cfg):
+    Di, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :Di]
+    Bm = xbc[..., Di : Di + G * N]
+    Cm = xbc[..., Di + G * N :]
+    return x, Bm, Cm
+
+
+def ssm_block(params, u, cfg, initial_state=None,
+              constrain=lambda t, kind: t):
+    """Full mamba2 mixer, sequence mode. u [B,S,D] -> y [B,S,D], final_state."""
+    from repro.models.layers import dense
+
+    Bb, S, _ = u.shape
+    H, P, G, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = dense(params["in_proj"], u)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+
+    # depthwise causal conv over [x, B, C]
+    w = params["conv_w"].astype(jnp.float32)  # [cw, conv_dim]
+    cw = w.shape[0]
+    pad = jnp.zeros((Bb, cw - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1).astype(jnp.float32)
+    conv = sum(
+        xp[:, i : i + S, :] * w[i][None, None, :] for i in range(cw)
+    ) + params["conv_b"][None, None, :].astype(jnp.float32)
+    conv = jax.nn.silu(conv).astype(u.dtype)
+
+    x, Bm, Cm = _split_conv_out(conv, cfg)
+    # shard SSD heads over TP: the intra-chunk weight tensor is
+    # [B, n, Q, Q, H] — head sharding keeps it 1/tp per device
+    # (EXPERIMENTS.md §Perf, jamba prefill iteration)
+    x = constrain(x.reshape(Bb, S, H, P), "ssm_heads")
+    Bm = constrain(Bm.reshape(Bb, S, G, N), "ssm_bc")
+    Cm = constrain(Cm.reshape(Bb, S, G, N), "ssm_bc")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    dt = constrain(dt, "ssm_dt")
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, h_final = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk,
+                             constrain=constrain)
+    y = y + params["D"][None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    y = y.reshape(Bb, S, cfg.d_inner)
+    y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                params["norm"]["scale"])
+    out = dense(params["out_proj"], y)
+    # conv tail state for decode handoff: last cw-1 pre-conv features
+    conv_state = jnp.concatenate([pad, xbc], axis=1)[:, -(cw - 1):, :]
+    return out, {"state": h_final.astype(jnp.float32), "conv": conv_state}
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def ssm_block_decode(params, u_t, cache, cfg):
+    """One-token mixer step. u_t [B,D] -> y [B,D], new cache."""
+    from repro.models.layers import dense
+
+    Bb = u_t.shape[0]
+    H, P, G, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = dense(params["in_proj"], u_t[:, None, :])[:, 0]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+
+    w = params["conv_w"].astype(jnp.float32)
+    cw = w.shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(jnp.float32), xbc[:, None, :].astype(jnp.float32)], axis=1)
+    conv = jnp.einsum("btc,tc->bc", hist, w) + params["conv_b"][None, :].astype(jnp.float32)
+    conv = jax.nn.silu(conv).astype(u_t.dtype)
+    new_conv_state = hist[:, 1:, :].astype(cache["conv"].dtype)
+
+    x, Bm, Cm = _split_conv_out(conv, cfg)
+    x = x.reshape(Bb, H, P)
+    Bm = Bm.reshape(Bb, G, N)
+    Cm = Cm.reshape(Bb, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, new_state = ssd_decode_step(cache["state"], x, dt, A, Bm, Cm)
+    y = y + params["D"][None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    y = y.reshape(Bb, cfg.d_inner)
+    y = rmsnorm(y.astype(u_t.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u_t.dtype),
+                params["norm"]["scale"])
+    out = dense(params["out_proj"], y[:, None, :])[:, 0]
+    return out, {"state": new_state, "conv": new_conv_state}

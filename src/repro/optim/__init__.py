@@ -1,0 +1,3 @@
+from repro.optim import adamw, grad_compress
+
+__all__ = ["adamw", "grad_compress"]

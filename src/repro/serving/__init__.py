@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, perplexity
+
+__all__ = ["Engine", "perplexity"]

@@ -1,0 +1,3 @@
+from repro.train import loop, step
+
+__all__ = ["loop", "step"]

@@ -1,0 +1,80 @@
+"""Training loop with fault-tolerance: resume-from-latest, async
+checkpoints with data-state, SIGTERM preemption save, and a straggler
+watchdog (per-step wall-clock EWMA; a step exceeding `straggler_factor`x
+the EWMA is logged — on a real cluster this is the signal to evict/re-mesh
+a slow host, which on CPU we can only detect and surface)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager, install_preemption_hook
+from repro.data import synthetic
+from repro.train import step as step_mod
+
+
+def train(
+    cfg,
+    *,
+    steps: int,
+    batch: int,
+    seq_len: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    seed: int = 0,
+    peak_lr: float = 3e-3,
+    grad_compress_bits: int = 0,
+    log_every: int = 20,
+    sharder=None,
+    straggler_factor: float = 3.0,
+    log=print,
+):
+    """Train a (tiny) model on the synthetic corpus; returns final state."""
+    state = step_mod.init_state(
+        jax.random.PRNGKey(seed), cfg, grad_compress_bits=grad_compress_bits
+    )
+    train_step = jax.jit(
+        step_mod.make_train_step(
+            cfg, sharder=sharder, peak_lr=peak_lr, total_steps=steps,
+            grad_compress_bits=grad_compress_bits,
+            loss_chunk=min(512, seq_len),
+        ),
+        donate_argnums=(0,),
+    )
+
+    start_step = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir)
+        restored = mgr.restore(state)
+        if restored is not None:
+            start_step, state, extra = restored
+            log(f"[resume] step {start_step} from {ckpt_dir}")
+        install_preemption_hook(
+            lambda: mgr.save(start_step, state, block=True)
+        )
+
+    data = synthetic.batches(
+        cfg.vocab_size, batch, seq_len, seed=seed, start_step=start_step
+    )
+    ewma = None
+    history = []
+    for i, b in zip(range(start_step, steps), data):
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, {k: b[k] for k in ("tokens", "labels")})
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if dt > straggler_factor * ewma and i > start_step + 3:
+            log(f"[straggler] step {i} took {dt:.2f}s (ewma {ewma:.2f}s)")
+        if i % log_every == 0 or i == steps - 1:
+            log(f"step {i:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        history.append(loss)
+        if mgr and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, state, extra={"data_step": b["step"] + 1})
+    if mgr:
+        mgr.save(steps, state, extra={"data_step": steps}, block=True)
+        mgr.wait()
+    return state, history

@@ -1,0 +1,106 @@
+"""Distributed train step assembly: loss -> grads (+optional blockwise
+gradient compression with error feedback) -> AdamW, with sharding specs
+from models/sharding.py (TP over `model`, DP over `pod`x`data`, FSDP over
+`data`, remat, chunked loss)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, seq2seq
+from repro.models.lm import NO_CONSTRAIN
+from repro.optim import adamw, grad_compress
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamWState
+    err: dict | None  # gradient-compression error feedback
+
+
+def init_state(key, cfg, *, grad_compress_bits: int = 0,
+               param_dtype=None) -> TrainState:
+    """param_dtype=bfloat16 stores bf16 master weights (f32 Adam moments
+    keep the update accurate) — halves the FSDP gather bytes and the
+    resident param memory at 27B+ scale (EXPERIMENTS.md §Perf)."""
+    if cfg.encoder_decoder:
+        params = seq2seq.init_params(key, cfg)
+    else:
+        params = lm.init_params(key, cfg)
+    if param_dtype is not None:
+        params = jax.tree.map(
+            lambda p: p.astype(param_dtype) if p.dtype == jnp.float32 else p,
+            params,
+        )
+    err = None
+    if grad_compress_bits:
+        err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=adamw.init(params), err=err)
+
+
+def make_train_step(cfg, *, sharder=None, peak_lr=3e-3, warmup=50,
+                    total_steps=1000, grad_compress_bits: int = 0,
+                    loss_chunk: int = 512, microbatches: int = 1):
+    """`microbatches` > 1 enables gradient accumulation: the global batch
+    is scanned in n chunks, bounding live activation memory at
+    O(L * microbatch * S * D) instead of O(L * batch * S * D) — the knob
+    that fits train_4k in HBM (EXPERIMENTS.md §Perf)."""
+    constrain = sharder.constrain if sharder is not None else NO_CONSTRAIN
+    q_pad = sharder.head_pad() if sharder is not None else None
+
+    def loss_of(params, batch):
+        if cfg.encoder_decoder:
+            return seq2seq.loss_fn(
+                params, batch["frames"], batch["tokens"], batch["labels"], cfg,
+                constrain=constrain,
+            )
+        return lm.loss_fn(
+            params, batch["tokens"], batch["labels"], cfg,
+            constrain=constrain, q_pad=q_pad, loss_chunk=loss_chunk,
+        )
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(carry, mb):
+            loss_sum, g_acc = carry
+            loss, g = jax.value_and_grad(loss_of)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            return (loss_sum + loss, g_acc), None
+
+        (loss_sum, g), _ = jax.lax.scan(body, (0.0, g0), mbs)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        err = state.err
+        if grad_compress_bits:
+            grads, err = grad_compress.compress_tree(
+                grads, err, bits=grad_compress_bits
+            )
+        lr = adamw.cosine_lr(
+            state.opt.step, peak=peak_lr, warmup=warmup, total=total_steps
+        )
+        params, opt, gnorm = adamw.update(state.params, grads, state.opt, lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=params, opt=opt, err=err), metrics
+
+    return train_step

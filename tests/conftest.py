@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# The 512-device override lives only at the top of repro/launch/dryrun.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

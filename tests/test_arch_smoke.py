@@ -1,0 +1,131 @@
+"""REQUIRED per-architecture smoke tests: reduced config of the same
+family, one forward + one train step on CPU, asserting shapes and no NaNs.
+Full configs are exercised only via the dry-run (no allocation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ASSIGNED, get_arch
+from repro.models import lm, seq2seq
+from repro.train import step as step_mod
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_shapes(arch):
+    cfg = get_arch(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    if cfg.encoder_decoder:
+        params = seq2seq.init_params(key, cfg)
+        frames = jax.random.normal(key, (B, S, cfg.d_model))
+        toks = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+        mem = seq2seq.encode(params, frames, cfg)
+        assert mem.shape == (B, S, cfg.d_model)
+        h, _ = seq2seq.decoder_seq(params, toks, mem, cfg)
+        logits = seq2seq.logits_from_hidden(params, h, cfg)
+        assert logits.shape == (B, 8, cfg.vocab_size)
+    else:
+        params = lm.init_params(key, cfg)
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        h, _, _ = lm.backbone_seq(params, toks, cfg)
+        logits = lm.logits_from_hidden(params, h, cfg)
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step_no_nans(arch):
+    cfg = get_arch(arch).reduced()
+    state = step_mod.init_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(step_mod.make_train_step(cfg, loss_chunk=16))
+    B, S = 2, 32
+    key = jax.random.PRNGKey(1)
+    if cfg.encoder_decoder:
+        batch = {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model)),
+            "tokens": jax.random.randint(key, (B, 8), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, 8), 0, cfg.vocab_size),
+        }
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda a, b: float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            new_state.params, state.params,
+        ),
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_schedule_covers_all_layers(arch):
+    cfg = get_arch(arch)
+    sched = cfg.layer_schedule()
+    assert len(sched) == cfg.n_layers
+    p = cfg.scan_period()
+    assert cfg.n_layers % p == 0
+    if cfg.family == "hybrid":
+        mixers = [m for m, _ in sched]
+        assert mixers.count("attn") == cfg.n_layers // cfg.attn_period
+        assert "ssm" in mixers
+    if cfg.family == "moe":
+        assert all(f == "moe" for _, f in sched)
+    if cfg.local_global_period:
+        assert sched[0][0] == "attn_local" and sched[1][0] == "attn_global"
+
+
+def test_exact_assigned_geometry():
+    """Pin the assigned numbers so config drift fails loudly."""
+    c = get_arch("deepseek-coder-33b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (62, 7168, 56, 8, 19200, 32256)
+    c = get_arch("gemma2-27b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (46, 4608, 36864, 256000)
+    assert c.attn_logit_softcap == 50.0 and c.final_logit_softcap == 30.0
+    c = get_arch("moonshot-v1-16b-a3b")
+    assert (c.n_experts, c.top_k, c.moe_d_ff, c.vocab_size) == (64, 6, 1408, 163840)
+    c = get_arch("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab_size) == (24, 768, 128, 50280)
+    c = get_arch("jamba-v0.1-52b")
+    assert (c.attn_period, c.n_experts, c.moe_period) == (8, 16, 2)
+    c = get_arch("seamless-m4t-large-v2")
+    assert c.encoder_decoder and c.vocab_size == 256206
+
+
+def test_param_counts_in_expected_range():
+    """Total params should be near the name-plate sizes."""
+    expect = {
+        "h2o-danube-3-4b": (2.5e9, 5e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "qwen2-7b": (6.5e9, 8.5e9),
+        "gemma2-27b": (24e9, 30e9),
+        # the ASSIGNED geometry (64e x d_ff1408 x 48L) gives 28B total —
+        # the hf nameplate (16B) uses shared-expert tricks outside the
+        # assigned numbers; we implement the assignment exactly
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+        "mamba2-130m": (0.1e9, 0.17e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+        "chameleon-34b": (32e9, 37e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_arch("moonshot-v1-16b-a3b")
+    active = cfg.active_param_count()
+    assert 2e9 <= active <= 5e9, active / 1e9
+    cfg = get_arch("phi3.5-moe-42b-a6.6b")
+    active = cfg.active_param_count()
+    assert 5e9 <= active <= 8.5e9, active / 1e9

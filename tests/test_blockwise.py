@@ -1,0 +1,95 @@
+"""Block-wise quantization invariants (paper Eq. 1) + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blockwise
+from repro.core.codebooks import make_codebook
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("dtype", ["int", "float", "dynamic", "quantile"])
+@pytest.mark.parametrize("bits", [3, 4, 5, 8])
+def test_error_decreases_with_bits_and_is_bounded(dtype, bits):
+    x = _rand((128, 64), scale=2.5)
+    book = make_codebook(dtype, bits, tensor=x)
+    err = blockwise.quantize_dequantize(x, book, 64) - x
+    rel = float(jnp.sqrt(jnp.mean(err**2)) / jnp.sqrt(jnp.mean(x**2)))
+    assert rel < {3: 0.45, 4: 0.25, 5: 0.15, 8: 0.05}[bits]
+
+
+@pytest.mark.parametrize("dtype", ["int", "float", "quantile"])
+def test_smaller_blocks_reduce_error_with_outliers(dtype):
+    # blocking confines outliers (paper §2.3): plant huge outliers and check
+    x = np.random.default_rng(0).normal(size=4096).astype(np.float32)
+    x[::512] = 40.0  # outliers pollute whole-tensor scaling
+    x = jnp.asarray(x)
+    book = make_codebook(dtype, 4, tensor=x)
+    errs = {}
+    for B in (64, 1024, 4096):
+        q = blockwise.quantize_dequantize(x, book, B)
+        errs[B] = float(jnp.mean((q - x) ** 2))
+    assert errs[64] < errs[1024] <= errs[4096] * 1.01, errs
+
+
+def test_codes_fit_in_bits():
+    x = _rand((999,), seed=3)
+    for bits in (3, 4, 5, 8):
+        book = make_codebook("float", bits)
+        q = blockwise.encode(x, book, 64)
+        assert int(q.codes.max()) < 2**bits
+        assert q.scales.shape == (-(-999 // 64),)
+
+
+def test_centering_roundtrip_recovers_offset_distribution():
+    x = _rand((256, 64), seed=1) + 7.0
+    book = make_codebook("int", 4)
+    plain = blockwise.quantize_dequantize(x, book, 64)
+    cent = blockwise.quantize_dequantize(x, book, 64, centering=True)
+    assert float(jnp.mean((cent - x) ** 2)) < float(jnp.mean((plain - x) ** 2))
+
+
+def test_encode_chunked_matches_encode():
+    x = _rand((700,), seed=2)
+    book = make_codebook("float", 4)
+    a = blockwise.encode(x, book, 64)
+    b = blockwise.encode_chunked(x, book, 64, chunk_blocks=4)
+    assert jnp.array_equal(a.codes, b.codes)
+    assert jnp.allclose(a.scales.astype(jnp.float32), b.scales.astype(jnp.float32))
+
+
+@given(
+    n=st.integers(4, 500),
+    block=st.sampled_from([16, 64, 128]),
+    bits=st.sampled_from([3, 4, 8]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_dequant_within_scale_of_input(n, block, bits, seed):
+    """|x - Q(x)| <= per-block scale * max codebook gap (nearest-value law)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3
+    book = make_codebook("int", bits)
+    q = blockwise.encode(x, book, block)
+    xr = blockwise.decode(q, book, x.shape, out_dtype=jnp.float32)
+    gaps = jnp.max(jnp.diff(book))
+    n_blocks = -(-n // block)
+    scale_per_elem = jnp.repeat(q.scales.astype(jnp.float32), block)[:n]
+    bound = scale_per_elem * (gaps / 2) + 1e-2 * scale_per_elem + 1e-6
+    assert bool(jnp.all(jnp.abs(xr - x) <= bound))
+
+
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([3, 4, 5]))
+@settings(max_examples=20, deadline=None)
+def test_property_idempotent(seed, bits):
+    """Quantizing an already-quantized tensor is exact (fixed point)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    book = make_codebook("float", bits)
+    once = blockwise.quantize_dequantize(x, book, 64)
+    twice = blockwise.quantize_dequantize(once, book, 64)
+    assert jnp.allclose(once, twice, atol=1e-5)

@@ -1,0 +1,75 @@
+"""Data-type codebook properties (paper App. A)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codebooks as cb
+
+STATIC_DTYPES = ["int", "float", "dynamic"]
+BITS = [3, 4, 5, 6, 8]
+
+
+@pytest.mark.parametrize("dtype", STATIC_DTYPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_codebook_basic_properties(dtype, bits):
+    book = np.asarray(cb.make_codebook(dtype, bits))
+    assert book.shape == (2**bits,)
+    assert np.all(np.diff(book) >= 0), "codebooks must be sorted"
+    assert abs(np.max(np.abs(book)) - 1.0) < 1e-6, "normalized to absmax 1"
+    assert book.min() < 0 < book.max(), "signed range"
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_int_codebook_is_symmetric_linear(bits):
+    book = np.asarray(cb.make_codebook("int", bits))
+    uniq = np.unique(book)
+    # truncated-symmetric: 2^k - 1 distinct levels, uniformly spaced,
+    # mirrored around an exact zero (paper App. A)
+    assert len(uniq) == 2**bits - 1
+    diffs = np.diff(uniq)
+    assert np.allclose(diffs, diffs[0], atol=1e-6)
+    assert np.allclose(np.sort(-uniq), uniq, atol=1e-7)
+    assert 0.0 in uniq
+
+
+def test_float_codebook_matches_paper_exponent_choice():
+    # paper: 3-bit exponent for 4..8-bit, 2-bit for 3-bit
+    assert cb.PAPER_EXPONENT_BITS[3] == 2
+    assert all(cb.PAPER_EXPONENT_BITS[k] == 3 for k in range(4, 9))
+    e2 = np.asarray(cb.float_codebook(4, 2))
+    e3 = np.asarray(cb.float_codebook(4, 3))
+    assert not np.allclose(e2, e3)
+
+
+def test_dynamic_codebook_has_zero_and_wide_range():
+    book = np.asarray(cb.make_codebook("dynamic", 5))
+    assert 0.0 in book
+    mags = np.abs(book[book != 0])
+    assert mags.max() / mags.min() > 100, "dynamic exponent spans decades"
+
+
+@given(st.integers(3, 8), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quantile_codebook_equal_occupancy(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+    book = np.asarray(cb.quantile_codebook(x, bits))
+    assert book.shape == (2**bits,)
+    assert np.all(np.diff(book) >= 0)
+    # each bin should hold roughly equal mass (information-theoretic optimum)
+    bounds = (book[:-1] + book[1:]) / 2
+    x_n = np.asarray(x) / np.max(np.abs(x))
+    counts = np.histogram(x_n, bins=np.concatenate([[-2], bounds, [2]]))[0]
+    nonzero = counts[counts > 0]
+    assert nonzero.std() / nonzero.mean() < 1.0
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5])
+def test_boundaries_are_nearest_value_decision_points(bits):
+    book = cb.make_codebook("float", bits)
+    bounds = cb.codebook_boundaries(book)
+    assert bounds.shape == (2**bits - 1,)
+    mid = (np.asarray(book)[:-1] + np.asarray(book)[1:]) / 2
+    assert np.allclose(np.asarray(bounds), mid)

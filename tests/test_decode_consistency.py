@@ -1,0 +1,102 @@
+"""Decode == full-sequence logits, per family (the serving-path oracle).
+
+MoE archs pin capacity_factor high: capacity dropping is train-mode
+behavior that legitimately differs between full-seq and single-token
+processing (covered separately in test_moe.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ASSIGNED, get_arch
+from repro.models import lm, seq2seq
+
+DECODE_ARCHS = [a for a in ASSIGNED if not get_arch(a).encoder_decoder]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_matches_full(arch):
+    cfg = get_arch(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, Sp = 2, 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    h, _, _ = lm.backbone_seq(params, toks, cfg)
+    full = lm.logits_from_hidden(params, h, cfg)
+    logits, caches = lm.prefill(params, toks[:, :Sp], cfg, cache_len=S)
+    errs = [float(jnp.max(jnp.abs(logits - full[:, Sp - 1])))]
+    for t in range(Sp, S):
+        logits, caches = lm.decode_step(params, toks[:, t], caches, t, cfg)
+        errs.append(float(jnp.max(jnp.abs(logits - full[:, t]))))
+    assert max(errs) < 0.08, (arch, errs)
+
+
+def test_seq2seq_prefill_decode_matches_full():
+    cfg = get_arch("seamless-m4t-large-v2").reduced()
+    params = seq2seq.init_params(jax.random.PRNGKey(0), cfg)
+    B, Ssrc, T, Tp = 2, 16, 12, 8
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, Ssrc, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab_size)
+    mem = seq2seq.encode(params, frames, cfg)
+    h, _ = seq2seq.decoder_seq(params, toks, mem, cfg)
+    full = seq2seq.logits_from_hidden(params, h, cfg)
+    logits, caches = seq2seq.prefill(params, frames, toks[:, :Tp], cfg)
+    errs = [float(jnp.max(jnp.abs(logits - full[:, Tp - 1])))]
+    for t in range(Tp, T):
+        logits, caches = seq2seq.decode_step(params, toks[:, t], caches, t, cfg)
+        errs.append(float(jnp.max(jnp.abs(logits - full[:, t]))))
+    assert max(errs) < 0.05, errs
+
+
+def test_sliding_window_ring_cache_evicts_correctly():
+    """danube: decoding past the window must match full attention logits
+    (SWA masks old positions anyway, so the ring losing them is lossless)."""
+    cfg = get_arch("h2o-danube-3-4b").reduced()  # window 16
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, Sp = 2, 40, 8  # decode well past the 16-token window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    h, _, _ = lm.backbone_seq(params, toks, cfg)
+    full = lm.logits_from_hidden(params, h, cfg)
+    logits, caches = lm.prefill(params, toks[:, :Sp], cfg, cache_len=S)
+    for t in range(Sp, S):
+        logits, caches = lm.decode_step(params, toks[:, t], caches, t, cfg)
+        err = float(jnp.max(jnp.abs(logits - full[:, t])))
+        assert err < 0.08, (t, err)
+    # the ring cache stayed window-sized
+    k_shape = caches[0]["k"].shape
+    assert k_shape[2] == cfg.sliding_window, k_shape
+
+
+def test_flash_attention_matches_naive():
+    from repro.models import attention as A
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, Dh = 2, 64, 8, 4, 16
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, Dh))
+
+    def naive(q, k, v, window=0, cap=0.0):
+        G = H // K
+        kk = jnp.repeat(k, G, axis=2)
+        vv = jnp.repeat(v, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * Dh**-0.5
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        i = jnp.arange(S)
+        mask = i[None, :] <= i[:, None]
+        if window:
+            mask &= i[None, :] > i[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+    for window, cap, cq, ck in [(0, 0.0, 16, 16), (24, 0.0, 16, 32),
+                                (0, 30.0, 32, 16), (8, 50.0, 64, 64)]:
+        out = A.flash_attention(q, k, v, causal=True, window=window, cap=cap,
+                                chunk_q=cq, chunk_kv=ck)
+        ref = naive(q, k, v, window=window, cap=cap)
+        assert jnp.allclose(out, ref, atol=2e-3), (window, cap, cq, ck)

@@ -1,0 +1,141 @@
+"""Distribution layer tests.
+
+Numeric shard_map / pjit checks run in a SUBPROCESS with 8 forced host
+devices (the flag must not leak into this process — dryrun.py rule).
+Pure sharding-policy logic is tested in-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models.sharding import Sharder
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_head_padding_policy():
+    class FakeMesh:  # duck-typed: only axis_names/shape/size used
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 4}
+        size = 8
+
+    s = Sharder.__new__(Sharder)
+    s.mesh = FakeMesh()
+    s.cfg = get_arch("deepseek-coder-33b")
+    s.tp_size = 4
+    s.replicate = False
+    assert s.head_pad() == 56  # 56 % 4 == 0 already at tp=4
+    s.tp_size = 16
+    assert s.head_pad() == 64  # 56 -> 64 (divisible by 16 and kv=8)
+    s.cfg = get_arch("qwen2-7b")
+    assert s.head_pad() == 32  # 28 -> 32 (kv=4, tp=16)
+
+
+def test_no_mesh_sharder_is_noop():
+    cfg = get_arch("tiny-160k")
+    s = Sharder(None, cfg)
+    import jax.numpy as jnp
+
+    x = jnp.ones((2, 3, 4))
+    assert s.constrain(x, "residual") is x
+    from repro.models.blocks import local_decode_attn
+
+    assert s.decode_attn_fn(4) is local_decode_attn
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, dataclasses, json
+    from repro.configs.registry import get_arch
+    from repro.models import lm
+    from repro.models.sharding import Sharder
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = dataclasses.replace(
+        get_arch("h2o-danube-3-4b").reduced(),
+        n_heads=4, n_kv_heads=2, d_model=64, sliding_window=0,
+    )
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    sharder = Sharder(mesh, cfg, replicate_params_below=0)  # force sharding
+    B, Sp, S = 4, 8, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    # unsharded oracle
+    logits_ref, caches_ref = lm.prefill(params, toks[:, :Sp], cfg, cache_len=S)
+    for t in range(Sp, S):
+        logits_ref, caches_ref = lm.decode_step(params, toks[:, t], caches_ref, t, cfg)
+
+    # sharded: pjit prefill + shard_map decode over seq-sharded cache
+    pspec = sharder.param_spec_tree(params)
+    params_s = jax.tree.map(lambda x, s: jax.device_put(x, s), params, pspec)
+    prefill = jax.jit(lambda p, t: lm.prefill(
+        p, t, cfg, constrain=sharder.constrain, q_pad=sharder.head_pad(),
+        cache_len=S))
+    with mesh:
+        logits_s, caches_s = prefill(params_s, toks[:, :Sp])
+        cspec = sharder.cache_spec_tree(caches_s, B)
+        caches_s = jax.tree.map(lambda x, s: jax.device_put(x, s), caches_s, cspec)
+        dec = jax.jit(lambda p, tok, c, pos: lm.decode_step(
+            p, tok, c, pos, cfg, constrain=sharder.constrain,
+            decode_attn=sharder.decode_attn_fn(B)))
+        for t in range(Sp, S):
+            logits_s, caches_s = dec(params_s, toks[:, t], caches_s, jnp.int32(t))
+    err = float(jnp.max(jnp.abs(logits_s.astype(jnp.float32) -
+                                logits_ref.astype(jnp.float32))))
+    print(json.dumps({{"err": err}}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_unsharded_subprocess():
+    script = _SUBPROCESS_SCRIPT.format(src=SRC)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["err"] < 0.05, out
+
+
+@pytest.mark.slow
+def test_elastic_remesh_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp, json, tempfile
+        from repro.configs.registry import get_arch
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.launch.elastic import remesh_state
+        from repro.train import step as step_mod
+
+        cfg = get_arch("tiny-160k")
+        state = step_mod.init_state(jax.random.PRNGKey(0), cfg)
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            mgr.save(3, state)
+            _, restored, _ = mgr.restore(state)
+        # re-mesh the restored host state onto a (4, 2) mesh
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        placed, sharder = remesh_state(restored, cfg, mesh)
+        ok = jax.tree.all(jax.tree.map(
+            lambda a, b: jnp.allclose(jnp.asarray(a, jnp.float32),
+                                      jnp.asarray(b, jnp.float32)),
+            placed.params, state.params))
+        print(json.dumps({{"ok": bool(ok), "devices": jax.device_count()}}))
+    """).format(src=SRC)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 8

@@ -1,0 +1,39 @@
+"""k-bit word packing: exact roundtrip for every k and length."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@given(
+    bits=st.sampled_from([3, 4, 5, 6, 8]),
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_roundtrip(bits, n, seed):
+    codes = jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, 2**bits
+    ).astype(jnp.uint8)
+    words = packing.pack(codes, bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (packing.packed_size(n, bits),)
+    back = packing.unpack(words, bits, n)
+    assert jnp.array_equal(back, codes)
+
+
+@pytest.mark.parametrize("bits,expect", [(3, 3.2), (4, 4.0), (5, 32 / 6),
+                                         (6, 6.4), (8, 8.0)])
+def test_stored_bits(bits, expect):
+    assert abs(packing.stored_bits_per_param(bits) - expect) < 1e-9
+
+
+def test_pack_batched_last_axis():
+    codes = jax.random.randint(jax.random.PRNGKey(0), (4, 160), 0, 16).astype(jnp.uint8)
+    words = packing.pack(codes, 4)
+    assert words.shape == (4, 20)
+    back = packing.unpack(words, 4, 160)
+    assert jnp.array_equal(back, codes)

@@ -1,0 +1,83 @@
+"""QuantizedTensor container: roundtrips, batching, outliers, scan/jit flow."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qtensor import dequantize_tensor, quantization_error, quantize_tensor
+
+
+def _x(shape, seed=0, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("dtype", ["int", "float", "dynamic", "quantile"])
+@pytest.mark.parametrize("bits", [3, 4, 8])
+def test_roundtrip_all_dtypes(dtype, bits):
+    x = _x((64, 96))
+    qt = quantize_tensor(x, bits=bits, dtype=dtype, block_size=64)
+    xr = dequantize_tensor(qt, out_dtype=jnp.float32)
+    assert xr.shape == x.shape
+    assert float(quantization_error(x, qt)) < 0.45
+
+
+def test_batched_equals_per_item():
+    xs = _x((3, 32, 48), seed=1)
+    qt = quantize_tensor(xs, bits=4, dtype="float", block_size=32, batch_dims=1)
+    whole = dequantize_tensor(qt, out_dtype=jnp.float32)
+    for i in range(3):
+        qi = quantize_tensor(xs[i], bits=4, dtype="float", block_size=32)
+        assert jnp.allclose(whole[i], dequantize_tensor(qi, out_dtype=jnp.float32))
+
+
+def test_scan_over_stacked_qtensor():
+    xs = _x((5, 16, 16), seed=2)
+    qt = quantize_tensor(xs, bits=4, dtype="float", block_size=16, batch_dims=1)
+
+    def body(c, layer_qt):
+        return c + jnp.sum(dequantize_tensor(layer_qt, out_dtype=jnp.float32)), None
+
+    tot, _ = jax.lax.scan(body, 0.0, qt)
+    assert jnp.allclose(tot, jnp.sum(dequantize_tensor(qt, out_dtype=jnp.float32)),
+                        rtol=1e-5)
+
+
+def test_outlier_rows_axis0_exact():
+    x = _x((64, 32), seed=3)
+    oidx = jnp.array([[2, 7, 50]])
+    qt = quantize_tensor(x[None], bits=3, dtype="int", block_size=32,
+                         batch_dims=1, outlier_idx=oidx)
+    xr = dequantize_tensor(qt, out_dtype=jnp.float32)[0]
+    for j in (2, 7, 50):
+        assert float(jnp.max(jnp.abs(xr[j] - x[j]))) < 0.02  # bf16-exact
+
+
+def test_outlier_cols_axis_last_exact():
+    x = _x((16, 64), seed=4)
+    oidx = jnp.array([[1, 33]])
+    qt = quantize_tensor(x[None], bits=3, dtype="int", block_size=32,
+                         batch_dims=1, outlier_idx=oidx, outlier_axis=-1)
+    xr = dequantize_tensor(qt, out_dtype=jnp.float32)[0]
+    for j in (1, 33):
+        assert float(jnp.max(jnp.abs(xr[:, j] - x[:, j]))) < 0.02
+    assert qt.bits_breakdown().outlier_bits > 0
+
+
+def test_bits_breakdown_matches_paper_accounting():
+    x = _x((128, 64))
+    qt = quantize_tensor(x, bits=4, dtype="float", block_size=64)
+    bd = qt.bits_breakdown()
+    assert abs(bd.ideal_bits_per_param - (4 + 16 / 64)) < 1e-9
+    qt_c = quantize_tensor(x, bits=4, dtype="float", block_size=64, centering=True)
+    assert abs(qt_c.bits_breakdown().ideal_bits_per_param - (4 + 32 / 64)) < 1e-9
+
+
+def test_jit_through_quantize_dequantize():
+    x = _x((64, 64))
+
+    @jax.jit
+    def f(x):
+        qt = quantize_tensor(x, bits=4, dtype="float", block_size=64)
+        return dequantize_tensor(qt, out_dtype=jnp.float32)
+
+    assert f(x).shape == x.shape

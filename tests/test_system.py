@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system: train a tiny LM on
+the synthetic corpus, quantize it every way the paper studies, and check
+the qualitative laws the paper reports hold on the weight-error level
+(full perplexity-based law reproduction lives in benchmarks/)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import QuantConfig
+from repro.configs.registry import get_arch
+from repro.core.qtensor import quantization_error, quantize_tensor
+from repro.models import lm
+from repro.models.quantize import bits_report, quantize_params
+from repro.serving import perplexity
+from repro.train import loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_arch("tiny-160k")
+    state, hist = loop.train(cfg, steps=80, batch=16, seq_len=64,
+                             log=lambda *_: None)
+    assert hist[-1] < hist[0] - 0.5, "tiny model must learn"
+    from repro.data.synthetic import ZipfMarkov
+
+    toks = ZipfMarkov(cfg.vocab_size).sample(jax.random.PRNGKey(42), 12, 65)
+    return cfg, state.params, toks
+
+
+def test_error_monotone_in_precision(trained):
+    """More bits -> lower weight error, for every data type."""
+    _, params, _ = trained
+    w = params["stack"][0]["mixer"]["wq"]["w"][0]
+    for dtype in ("int", "float", "dynamic", "quantile"):
+        errs = [
+            float(quantization_error(
+                w, quantize_tensor(w, bits=k, dtype=dtype, block_size=64)))
+            for k in (3, 4, 5, 8)
+        ]
+        assert errs == sorted(errs, reverse=True), (dtype, errs)
+
+
+def test_quantile_is_best_4bit_dtype(trained):
+    """Paper §5.2: quantile quantization is the best data type on average."""
+    _, params, _ = trained
+    w = params["stack"][0]["mixer"]["wq"]["w"][0]
+    errs = {
+        dt: float(quantization_error(
+            w, quantize_tensor(w, bits=4, dtype=dt, block_size=64)))
+        for dt in ("int", "float", "dynamic", "quantile")
+    }
+    assert errs["quantile"] == min(errs.values()), errs
+
+
+def test_small_blocks_beat_large_at_low_bits(trained):
+    _, params, _ = trained
+    w = params["stack"][0]["ffn"]["w_up"]["w"][0]
+    errs = {
+        B: float(quantization_error(
+            w, quantize_tensor(w, bits=4, dtype="float", block_size=B)))
+        for B in (64, 256, 1024)
+    }
+    assert errs[64] <= errs[256] <= errs[1024], errs
+
+
+def test_end_to_end_ppl_ordering(trained):
+    cfg, params, toks = trained
+    ppl_fp = perplexity(params, cfg, toks)
+    qp4 = quantize_params(params, QuantConfig(bits=4, dtype="quantile"), cfg)
+    qp3 = quantize_params(params, QuantConfig(bits=3, dtype="int",
+                                              block_size=1024), cfg)
+    p4, p3 = perplexity(qp4, cfg, toks), perplexity(qp3, cfg, toks)
+    assert ppl_fp <= p4 * 1.01 and p4 <= p3 * 1.02, (ppl_fp, p4, p3)
+
+
+def test_total_bits_tradeoff_accounting(trained):
+    """The paper's core x-axis: same tensor bits, different (size, k)."""
+    cfg, params, _ = trained
+    r4 = bits_report(quantize_params(params, QuantConfig(bits=4), cfg))
+    r8 = bits_report(quantize_params(params, QuantConfig(bits=8), cfg))
+    assert r8["total_bits_ideal"] > r4["total_bits_ideal"]
+    q_params = r4["quantized_params"]
+    expected_delta = 4 * q_params  # 8-bit pays 4 extra bits on quantized params
+    assert abs((r8["total_bits_ideal"] - r4["total_bits_ideal"]) - expected_delta) < 1
+
+
+def test_generation_quality_survives_4bit(trained):
+    """4-bit-quantized model's greedy continuations mostly match fp16's."""
+    cfg, params, toks = trained
+    from repro.serving import Engine
+
+    eng_fp = Engine(params, cfg, max_seq_len=48)
+    qp = quantize_params(params, QuantConfig(bits=4, dtype="quantile"), cfg)
+    eng_q = Engine(qp, cfg, max_seq_len=48)
+    prompts = toks[:4, :16]
+    out_fp = eng_fp.generate(prompts, 12)
+    out_q = eng_q.generate(prompts, 12)
+    agree = float(jnp.mean((out_fp == out_q).astype(jnp.float32)))
+    assert agree > 0.5, agree
