@@ -20,11 +20,11 @@ def log(*args):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3dt,fig3bs,fig4,table1,appb,kernel,roofline")
+                    help="comma list: fig2,fig3dt,fig3bs,fig4,table1,appb,kernel,roofline,serve")
     args = ap.parse_args()
     from benchmarks import (appb_centering, fig2_bitlevel, fig3_blocksize,
                             fig3_datatypes, fig4_proxy, kernel_bench,
-                            roofline, table1_gptq)
+                            roofline, serve_bench, table1_gptq)
 
     suites = {
         "fig2": fig2_bitlevel.run,
@@ -35,6 +35,7 @@ def main() -> None:
         "appb": appb_centering.run,
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
+        "serve": serve_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

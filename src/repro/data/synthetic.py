@@ -59,6 +59,42 @@ class ZipfMarkov:
         return float(jnp.sum(pi * h_cond))
 
 
+def serving_workload(vocab: int, n_requests: int, *,
+                     prompt_lens=tuple(range(8, 33)),
+                     max_new_range=(8, 48),
+                     rate: float = 2.0,
+                     seed: int = 0) -> list:
+    """A bursty serving trace: mixed-length Zipf-Markov prompts with
+    Poisson arrivals (exponential inter-arrival gaps, `rate` requests per
+    engine step) and per-request decode budgets drawn uniformly from
+    `max_new_range`.  Prompt lengths are drawn from `prompt_lens` —
+    by default every length in [8, 32], as in real traffic.  This is
+    the workload continuous batching exists for: a static engine can
+    only batch same-length prompts, so arbitrary lengths force small
+    batches, and each batch runs to its LONGEST member's budget with
+    retired rows idling — while the slot pool refills mid-flight
+    (docs/serving.md).
+
+    Returns a list of dicts {prompt, max_new, arrival_time} sorted by
+    arrival; fully deterministic in `seed`.
+    """
+    rng = np.random.default_rng(seed)
+    proc = ZipfMarkov(vocab, seed=seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    reqs = []
+    for i in range(n_requests):
+        L = int(rng.choice(prompt_lens))
+        max_new = int(rng.integers(max_new_range[0], max_new_range[1] + 1))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 17), i)
+        prompt = np.asarray(proc.sample(key, 1, L))[0]
+        reqs.append({
+            "prompt": prompt,
+            "max_new": max_new,
+            "arrival_time": float(arrivals[i]),
+        })
+    return reqs
+
+
 def batches(vocab: int, batch: int, seq_len: int, *, seed: int = 0,
             start_step: int = 0):
     """Infinite deterministic batch iterator; resumable via start_step

@@ -1,9 +1,21 @@
 """Serving launcher: load a checkpoint, quantize per the paper's
-recommendation (4-bit float, block 64 — §7), and serve batched requests.
+recommendation (4-bit float, block 64 — §7), and serve requests.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
-        --ckpt-dir artifacts/ckpt/tiny-2.6m --bits 4 --dtype float \
-        --batch 8 --prompt-len 32 --max-new 32
+Two modes:
+
+* ``--mode continuous`` (default) — drive a Poisson-arrival mixed-length
+  workload (data/synthetic.serving_workload) through the continuous-
+  batching Server: per-request admission into KV slots, mid-flight
+  prefill, per-slot retirement, streamed token callbacks.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
+          --bits 4 --dtype float --num-slots 8 --num-requests 32 \
+          --rate 2.0 --max-new 48
+
+* ``--mode static`` — the legacy same-length batch path (Engine).
+
+      PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
+          --mode static --batch 8 --prompt-len 32 --max-new 32
 """
 
 from __future__ import annotations
@@ -12,6 +24,7 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import QuantConfig
@@ -19,7 +32,7 @@ from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
 from repro.models.quantize import bits_report, quantize_params
-from repro.serving import Engine, perplexity
+from repro.serving import Engine, Server, perplexity
 from repro.train import step as step_mod
 
 
@@ -45,10 +58,21 @@ def main():
                     choices=["int", "float", "dynamic", "quantile", "fp16"])
     ap.add_argument("--block-size", type=int, default=64)
     ap.add_argument("--outlier-pct", type=float, default=0.0)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--mode", choices=["continuous", "static"],
+                    default="continuous")
+    # static-mode flags (None = unset, so continuous mode can reject
+    # them loudly instead of silently ignoring a legacy invocation)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # continuous-mode workload (Poisson arrivals, mixed lengths)
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--num-requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean request arrivals per engine step")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens of the first request as they land")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -67,18 +91,60 @@ def main():
               f"{rep['avg_bits_per_param']:.2f} bits/param, "
               f"{rep['total_bits_ideal']/8e9:.3f} GB ideal")
 
-    engine = Engine(params, cfg,
-                    max_seq_len=args.prompt_len + args.max_new)
-    prompts = synthetic.ZipfMarkov(cfg.vocab_size).sample(
-        jax.random.PRNGKey(1), args.batch, args.prompt_len
+    if args.mode == "static":
+        batch = args.batch if args.batch is not None else 8
+        prompt_len = args.prompt_len if args.prompt_len is not None else 32
+        engine = Engine(params, cfg,
+                        max_seq_len=prompt_len + args.max_new)
+        prompts = synthetic.ZipfMarkov(cfg.vocab_size).sample(
+            jax.random.PRNGKey(1), batch, prompt_len
+        )
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, args.max_new,
+                              temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        toks = out.size
+        print(f"generated {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s batched)")
+        print("sample:", out[0].tolist())
+        return
+
+    # continuous: Poisson-arrival mixed-length stream through the slot pool
+    if args.batch is not None or args.prompt_len is not None:
+        raise SystemExit(
+            "--batch/--prompt-len are static-mode flags; continuous mode "
+            "sizes the workload with --num-slots/--num-requests/--max-new "
+            "(or pass --mode static)"
+        )
+    reqs = synthetic.serving_workload(
+        cfg.vocab_size, args.num_requests,
+        max_new_range=(max(1, args.max_new // 4), args.max_new),
+        rate=args.rate,
     )
+    max_seq_len = max(len(r["prompt"]) for r in reqs) + args.max_new
+    server = Server(params, cfg, num_slots=args.num_slots,
+                    max_seq_len=max_seq_len)
+    first_id = None
     t0 = time.perf_counter()
-    out = engine.generate(prompts, args.max_new, temperature=args.temperature)
+    for r in reqs:
+        stream = None
+        if args.stream and first_id is None:
+            stream = lambda rid, tok: print(f"  [req {rid}] {tok}", flush=True)
+        rid = server.submit(r["prompt"], r["max_new"],
+                            temperature=args.temperature,
+                            arrival_time=r["arrival_time"],
+                            on_token=stream)
+        if first_id is None:
+            first_id = rid
+    results = server.run_until_drained()
     dt = time.perf_counter() - t0
-    toks = out.size
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s batched)")
-    print("sample:", out[0].tolist())
+    toks = sum(len(t) for t in results.values())
+    lat = [r.finished_at - r.arrival_time for r in server.scheduler.finished]
+    print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s continuous, {server.steps} engine steps)")
+    print(f"latency (engine steps): mean {np.mean(lat):.1f} "
+          f"p95 {np.percentile(lat, 95):.1f}")
+    print("sample:", results[first_id])
 
 
 if __name__ == "__main__":

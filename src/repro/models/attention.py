@@ -18,6 +18,12 @@ The KV cache is a dict {"k","v": [B, S_c, K, Dh], "pos": [S_c] int32} where
 Full caches write slot=position; sliding-window caches are ring buffers
 (slot = position %% window) — the pos array makes masking identical for
 both and is what lets danube/gemma2-local decode with O(window) memory.
+
+Continuous batching generalizes both `pos` arguments from a shared scalar
+to a PER-ROW vector [B]: ``pos`` may be [B] (each batch row decodes at its
+own absolute position; -1 = idle row) and the cache's ``pos`` array may be
+[B, S_c] (per-slot occupancy, docs/serving.md).  Every decode entry point
+below dispatches on ``pos.ndim`` so the legacy scalar path is untouched.
 """
 
 from __future__ import annotations
@@ -185,12 +191,17 @@ def flash_attention(
 # KV cache + decode
 # --------------------------------------------------------------------------
 
-def init_kv_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> dict:
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
+                  per_slot: bool = False) -> dict:
+    """per_slot=True gives each batch row its own position array [B, S_c]
+    (continuous batching: rows hold independent requests at independent
+    positions).  Default keeps the shared [S_c] layout."""
     K, Dh = cfg.n_kv_heads, cfg.head_dim
+    pos_shape = (batch, cache_len) if per_slot else (cache_len,)
     return {
         "k": jnp.zeros((batch, cache_len, K, Dh), dtype),
         "v": jnp.zeros((batch, cache_len, K, Dh), dtype),
-        "pos": jnp.full((cache_len,), -1, jnp.int32),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
     }
 
 
@@ -202,14 +213,31 @@ def cache_slot(pos, cache_len: int, window: int):
 
 
 def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0) -> dict:
-    """Write one token's K/V at absolute position `pos` (traced scalar)."""
+    """Write one token's K/V at absolute position `pos`.
+
+    pos is a traced scalar (all rows share the position, legacy batch
+    decode) or a vector [B] with a per-row cache pos array [B, S_c]
+    (continuous batching).  Vector rows with pos < 0 are idle slots: the
+    write lands at a clamped slot with pos=-1, i.e. an entry that the
+    attention mask treats as empty — idle rows stay inert.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
     S_c = cache["k"].shape[1]
-    slot = cache_slot(pos, S_c, window)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new[:, None], slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new[:, None], slot, axis=1)
-    p = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.asarray(pos, jnp.int32)[None], slot, axis=0
-    )
+    if pos.ndim == 0:
+        slot = cache_slot(pos, S_c, window)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new[:, None], slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new[:, None], slot, axis=1)
+        p = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos[None], slot, axis=0
+        )
+        return {"k": k, "v": v, "pos": p}
+    assert cache["pos"].ndim == 2, "vector pos needs a per-slot cache ([B,S_c] pos)"
+    B = pos.shape[0]
+    slot = jnp.clip(cache_slot(pos, S_c, window), 0, S_c - 1)
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new)
+    v = cache["v"].at[rows, slot].set(v_new)
+    p = cache["pos"].at[rows, slot].set(pos)
     return {"k": k, "v": v, "pos": p}
 
 
@@ -240,6 +268,10 @@ def decode_attention_partial(q, k_cache, v_cache, pos_arr, pos, *, cap=0.0, wind
     q [B,H,Dh]; k_cache,v_cache [B,S_loc,K,Dh]; pos_arr [S_loc] absolute
     positions (-1 empty).  Returns (m, l, pv): [B,K,G], [B,K,G], [B,K,G,Dh].
     Combine across slices with `combine_partials`.
+
+    Per-slot mode: pos [B] and pos_arr [B,S_loc] — each row masks against
+    its own position (rows with pos < 0 see an all-empty cache and return
+    l=0, i.e. a zero attention output).
     """
     B, H, Dh = q.shape
     K = k_cache.shape[2]
@@ -252,13 +284,17 @@ def decode_attention_partial(q, k_cache, v_cache, pos_arr, pos, *, cap=0.0, wind
     ) * (Dh**-0.5)
     if cap:
         s = cap * jnp.tanh(s / cap)
-    valid = (pos_arr >= 0) & (pos_arr <= pos)
+    pos = jnp.asarray(pos)
+    pos_q = pos[:, None] if pos.ndim else pos
+    valid = (pos_arr >= 0) & (pos_arr <= pos_q)
     if window:
-        valid &= pos_arr > pos - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= pos_arr > pos_q - window
+    # [S_loc] -> broadcast over batch; [B,S_loc] -> per-row mask
+    vmask = valid[None, None, None, :] if valid.ndim == 1 else valid[:, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
     m = jnp.maximum(jnp.max(s, axis=-1), NEG_INF / 2)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(vmask, p, 0.0)
     l = jnp.sum(p, axis=-1)
     pv = jnp.einsum(
         "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,

@@ -69,11 +69,12 @@ def _mixer_window(mixer: str, cfg) -> int:
     return 0
 
 
-def init_layer_cache(mixer: str, cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+def init_layer_cache(mixer: str, cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                     *, per_slot: bool = False):
     if mixer.startswith("attn"):
         w = _mixer_window(mixer, cfg)
         eff = min(cache_len, w) if w else cache_len
-        return attn_mod.init_kv_cache(cfg, batch, eff, dtype)
+        return attn_mod.init_kv_cache(cfg, batch, eff, dtype, per_slot=per_slot)
     return ssm_mod.init_ssm_cache(cfg, batch, dtype)
 
 
@@ -136,11 +137,15 @@ def apply_layer_seq(
 
 
 def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_attn):
-    """Single-token mode. x [B,D]; returns (x, new_cache)."""
+    """Single-token mode. x [B,D]; pos is a shared scalar or a per-row
+    vector [B] (continuous batching). Returns (x, new_cache)."""
     h = norm(p["mixer_norm"], x, cfg.norm_type)
     if mixer.startswith("attn"):
         window = _mixer_window(mixer, cfg)
-        positions = jnp.asarray(pos, jnp.int32)[None]
+        pos_v = jnp.asarray(pos, jnp.int32)
+        # RoPE wants positions [..., seq]: [1] broadcasts over the batch,
+        # [B,1] rotates each row by its own offset.
+        positions = pos_v[:, None] if pos_v.ndim else pos_v[None]
         q, k, v = attn_mod.project_qkv(p["mixer"], h[:, None, :], cfg, positions)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         o, cache = decode_attn(
@@ -263,13 +268,14 @@ def apply_stack_decode(stack, x, caches, pos, cfg, *, constrain, decode_attn):
     return x, new_caches
 
 
-def init_stack_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+def init_stack_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                     *, per_slot: bool = False):
     """Cache pytree matching apply_stack_decode's xs structure."""
     period = cfg.scan_period()
     sched = stack_schedule(cfg)
     n_periods = cfg.n_layers // period
     caches = []
     for mixer, _ in sched:
-        one = init_layer_cache(mixer, cfg, batch, cache_len, dtype)
+        one = init_layer_cache(mixer, cfg, batch, cache_len, dtype, per_slot=per_slot)
         caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), one))
     return tuple(caches)

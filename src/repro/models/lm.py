@@ -157,7 +157,9 @@ def prefill(params, inputs, cfg, *, constrain=NO_CONSTRAIN, q_pad=None,
 
 def decode_step(params, token, caches, pos, cfg, *, constrain=NO_CONSTRAIN,
                 decode_attn=blocks.local_decode_attn):
-    """One decoding step. token [B] (or [B,D] frames), pos scalar (traced ok).
+    """One decoding step. token [B] (or [B,D] frames); pos is a traced
+    scalar (all rows at the same position) or a vector [B] of per-row
+    positions (continuous batching over per-slot caches; -1 = idle row).
     Returns (logits [B,V], new caches)."""
     if cfg.input_kind == "frames":
         x = token.astype(jnp.bfloat16)
@@ -172,5 +174,6 @@ def decode_step(params, token, caches, pos, cfg, *, constrain=NO_CONSTRAIN,
     return logits, new_caches
 
 
-def init_caches(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
-    return blocks.init_stack_cache(cfg, batch, cache_len, dtype)
+def init_caches(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                *, per_slot: bool = False):
+    return blocks.init_stack_cache(cfg, batch, cache_len, dtype, per_slot=per_slot)

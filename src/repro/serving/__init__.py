@@ -1,3 +1,9 @@
-from repro.serving.engine import Engine, perplexity
+from repro.serving.engine import Engine, perplexity, sample_token
+from repro.serving.kvcache import SlotKVCache
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.server import Server, bucket_len
 
-__all__ = ["Engine", "perplexity"]
+__all__ = [
+    "Engine", "perplexity", "sample_token",
+    "SlotKVCache", "Scheduler", "Request", "Server", "bucket_len",
+]

@@ -1,4 +1,4 @@
-"""Batched inference engine: the paper's deployment target (16-bit
+"""Static-batch inference engine: the paper's deployment target (16-bit
 activations, k-bit weights).
 
 A generate() call takes a batch of same-length prompts, prefills the
@@ -8,8 +8,12 @@ masking.  Weights may be a quantized tree (models/quantize.py) — the
 engine is agnostic; quantization shows up only as smaller param leaves
 and the in-layer dequant.
 
-Continuous batching (per-slot positions) is future work; batching by
-prompt length is what this engine models (DESIGN.md).
+This is the STATIC path: one shared scalar position, batching by prompt
+length, the whole batch retires together.  It doubles as the numerical
+oracle for the continuous-batching subsystem (server.py + kvcache.py +
+scheduler.py), which serves mixed-length asynchronous request streams
+over a slot pool with per-row positions — see docs/serving.md for the
+slot/scheduler design and when to prefer each path.
 """
 
 from __future__ import annotations
@@ -20,6 +24,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import blocks, lm
+
+
+def sample_token(logits, key, temperature):
+    """Shared sampling semantics (static + continuous paths): greedy at
+    temperature 0, categorical otherwise.  temperature broadcasts —
+    scalar or per-row [B]."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature[..., None], 1e-6)
+    sampled = jax.random.categorical(key, scaled)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 
 class Engine:
@@ -49,17 +64,14 @@ class Engine:
                 params, token, caches, pos, cfg,
                 constrain=constrain, decode_attn=decode_attn,
             )
-            greedy = jnp.argmax(logits, axis=-1)
-            sampled = jax.random.categorical(
-                key, logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
-            )
-            nxt = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+            nxt = sample_token(logits, key, temperature)
             if self.eos_id is not None:
                 nxt = jnp.where(done, self.eos_id, nxt)
                 done = done | (nxt == self.eos_id)
             return nxt, caches, done
 
         self._step = jax.jit(step, donate_argnums=(2,))
+        self._first = jax.jit(sample_token)
 
     def generate(self, prompts: jnp.ndarray, max_new_tokens: int, *,
                  temperature: float = 0.0, key=None):
@@ -69,8 +81,11 @@ class Engine:
         if key is None:
             key = jax.random.PRNGKey(0)
         logits, caches = self._prefill(self.params, prompts)
-        done = jnp.zeros((B,), bool)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # the first token goes through the same temperature/categorical
+        # path as decode steps (it used to be unconditionally greedy)
+        key, sub = jax.random.split(key)
+        tok = self._first(logits, sub, jnp.float32(temperature))
+        done = (tok == self.eos_id) if self.eos_id is not None else jnp.zeros((B,), bool)
         out = [tok]
         for t in range(1, max_new_tokens):
             key, sub = jax.random.split(key)

@@ -1,0 +1,121 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool owns ONE decode-batch worth of per-slot caches (lm.init_caches
+with per_slot=True): every batch row is an independent *slot* holding one
+in-flight request at its own absolute position.  The host side tracks
+which slots are free, which request occupies each busy slot, and the
+next decode position per slot; the device side is a single cache pytree
+whose leaves never change shape — so the decode step compiles exactly
+once regardless of arrival pattern (docs/serving.md).
+
+Lifecycle of a slot:
+
+    alloc() -> slot            O(1) host pop from the free list
+    install_prefill(slot, ...) adopt the pool tree produced by the
+                               server's fused prefill+scatter_row jit
+    (decode steps write in place via per-row vector positions)
+    free(slot)                 O(1) host push; no device work — the stale
+                               row is masked by pos=-1 until re-prefilled
+
+`scatter_row` also INVALIDATES cache entries the prefill did not
+actually produce: prompts may be right-padded up to a compile bucket, and
+padded positions >= prompt_len must read as empty (-1) or the slot would
+attend to junk.  The validity test is on the *stored position values*
+(0 <= p < prompt_len), which is correct for both full caches and
+sliding-window ring caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+def _is_pos_leaf(path) -> bool:
+    return any(getattr(k, "key", None) == "pos" for k in path)
+
+
+def scatter_row(pool, cc, slot, length):
+    """Write a batch-1 prefill cache `cc` into row `slot` of the pool.
+    Pure/traceable — the server inlines it into its fused
+    prefill-into-slot jit.
+
+    Leaves line up because both trees were built with the same cache_len:
+    pool k/v [n_p, B, S_c, ...] vs cc k/v [n_p, 1, S_c, ...]; pool pos
+    [n_p, B, S_c] vs cc pos [n_p, S_c] (shared layout from prefill).
+    SSM state/conv leaves have no position axis and copy through the same
+    generic row write.
+    """
+    pl, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    cl, _ = jax.tree_util.tree_flatten_with_path(cc)
+    out = []
+    for (path, pa), (_, ca) in zip(pl, cl):
+        if _is_pos_leaf(path):
+            valid = (ca >= 0) & (ca < length)
+            out.append(pa.at[:, slot].set(jnp.where(valid, ca, -1)))
+        else:
+            out.append(pa.at[:, slot].set(ca[:, 0]))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class SlotKVCache:
+    """Fixed pool of `num_slots` decode slots over per-slot caches."""
+
+    def __init__(self, cfg, num_slots: int, cache_len: int, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.caches = lm.init_caches(cfg, num_slots, cache_len, dtype,
+                                     per_slot=True)
+        self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
+        self.active = np.zeros(num_slots, dtype=bool)
+        # absolute position of the NEXT token fed to each slot (-1 = idle)
+        self.next_pos = np.full(num_slots, -1, dtype=np.int64)
+
+    # -- host-side bookkeeping -------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        assert not self.active[slot], f"slot {slot} double-alloc"
+        self.active[slot] = True
+        return slot
+
+    def free(self, slot: int) -> None:
+        assert self.active[slot], f"slot {slot} double-free"
+        self.active[slot] = False
+        self.next_pos[slot] = -1
+        self._free.append(slot)
+
+    # -- device-side cache ops -------------------------------------------
+    def install_prefill(self, slot: int, new_caches, prompt_len: int) -> None:
+        """Adopt a pool tree that already had `slot` scattered (the
+        server's fused prefill-into-slot jit calls scatter_row inline,
+        saving a dispatch and a full-cache intermediate per admission)."""
+        assert self.active[slot], "install_prefill into a free slot"
+        self.caches = new_caches
+        self.next_pos[slot] = prompt_len
+
+    def advance(self, slot: int) -> None:
+        self.next_pos[slot] += 1
+
+    def pos_vector(self) -> jnp.ndarray:
+        """[num_slots] int32 decode positions; -1 marks idle rows (their
+        cache writes land clamped with pos=-1 and their attention output
+        is a masked zero — see models/attention.py)."""
+        return jnp.asarray(np.where(self.active, self.next_pos, -1), jnp.int32)
+
+    def room(self, slot: int) -> int:
+        """Decode positions left before this slot hits the cache budget."""
+        return self.cache_len - int(self.next_pos[slot])

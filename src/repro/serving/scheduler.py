@@ -1,0 +1,105 @@
+"""Request scheduler for continuous batching: FIFO admission, per-slot
+EOS retirement.
+
+The scheduler is pure host-side policy — it never touches device arrays.
+The server (server.py) asks it three questions each engine step:
+
+    next_admissible(now)  which queued request (FIFO order) may enter a
+                          free slot at virtual time `now`?
+    bind / retire         bookkeeping as requests enter / leave slots
+    should_retire(req)    EOS or max_new reached?
+
+Request lifecycle: QUEUED -> RUNNING (owns a slot) -> FINISHED.
+Admission is strict FIFO over *arrived* requests: a request with a later
+arrival_time never jumps an earlier one, even if the earlier one has not
+arrived yet — i.e. the queue models a real ingress order, and bursty
+traffic simply makes the head available sooner (docs/serving.md).
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+
+QUEUED, RUNNING, FINISHED = "QUEUED", "RUNNING", "FINISHED"
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request. `prompt` is a 1-D int sequence (list /
+    np.ndarray / jnp.ndarray); `arrival_time` is in virtual engine-step
+    units (0 = present from the start)."""
+
+    prompt: object
+    max_new: int
+    temperature: float = 0.0
+    id: int = field(default_factory=lambda: next(_ids))
+    arrival_time: float = 0.0
+    on_token: object = None          # callable(request_id, token) or None
+
+    # runtime state (owned by the scheduler / server)
+    state: str = QUEUED
+    slot: int | None = None
+    tokens: list = field(default_factory=list)
+    admitted_at: float | None = None
+    finished_at: float | None = None
+
+    def __post_init__(self):
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+
+class Scheduler:
+    def __init__(self, *, eos_id: int | None = None):
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.running: dict[int, Request] = {}   # slot -> request
+        self.finished: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        assert req.state == QUEUED
+        self.queue.append(req)
+        return req
+
+    def next_admissible(self, now: float) -> Request | None:
+        """FIFO head if it has arrived; None otherwise (strict ordering:
+        later requests never overtake a not-yet-arrived head)."""
+        if self.queue and self.queue[0].arrival_time <= now:
+            return self.queue[0]
+        return None
+
+    def next_arrival(self) -> float | None:
+        return self.queue[0].arrival_time if self.queue else None
+
+    def bind(self, req: Request, slot: int, now: float) -> None:
+        assert self.queue and self.queue[0] is req, "admission must be FIFO"
+        self.queue.popleft()
+        req.state = RUNNING
+        req.slot = slot
+        req.admitted_at = now
+        self.running[slot] = req
+
+    # -- retirement --------------------------------------------------------
+    def should_retire(self, req: Request) -> bool:
+        if len(req.tokens) >= req.max_new:
+            return True
+        return (self.eos_id is not None and len(req.tokens) > 0
+                and req.tokens[-1] == self.eos_id)
+
+    def retire(self, slot: int, now: float) -> Request:
+        req = self.running.pop(slot)
+        req.state = FINISHED
+        req.slot = None
+        req.finished_at = now
+        self.finished.append(req)
+        return req
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def drained(self) -> bool:
+        return not self.queue and not self.running

@@ -1,0 +1,200 @@
+"""Continuous-batching server: slot pool + scheduler + jitted model steps.
+
+Decode runs as ONE fixed-shape jitted step over the whole slot pool with
+a per-row position vector: busy rows decode their own request at their
+own position, idle rows are masked (pos=-1).  Between decode steps the
+server admits queued requests into free slots by prefilling each new
+prompt on its own (batch 1, padded to a compile-size bucket) and
+scattering the resulting KV rows into the slot — requests join and leave
+the decode batch mid-flight with no recompilation and no effect on the
+other rows (docs/serving.md).
+
+Restrictions: prompt-length bucketing (padding) is only enabled when
+every mixer is full attention — padded positions are provably masked out
+of a causal full-attention cache, but would corrupt SSM tail states and
+sliding-window ring buffers, so those archs prefill at exact prompt
+length (one compile per distinct length).  Sharded (multi-host) decode
+still goes through the static Engine path; continuous batching is
+single-device for now.
+
+Works unchanged for quantized param trees: the decode/prefill fns are
+the same lm.py entry points the static Engine uses, and quantization is
+invisible above the in-layer dequant.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks, lm
+from repro.serving.engine import sample_token
+from repro.serving.kvcache import SlotKVCache, scatter_row
+from repro.serving.scheduler import Request, Scheduler
+
+
+def bucket_len(n: int, *, minimum: int = 8, cap: int | None = None) -> int:
+    """Round up to a power of two so prefill compiles O(log max_len)
+    times instead of once per distinct prompt length."""
+    b = max(minimum, 1 << max(0, n - 1).bit_length())
+    return min(b, cap) if cap is not None else b
+
+
+def _full_attention_only(cfg) -> bool:
+    return all(
+        m.startswith("attn") and blocks._mixer_window(m, cfg) == 0
+        for m, _ in cfg.layer_schedule()
+    )
+
+
+class Server:
+    """Continuous-batching front end: submit() requests, step() the
+    engine (or run_until_drained()), receive per-request streamed tokens
+    via callbacks."""
+
+    def __init__(self, params, cfg, *, num_slots: int, max_seq_len: int,
+                 eos_id: int | None = None, seed: int = 0,
+                 dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.eos_id = eos_id
+        self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype)
+        self.scheduler = Scheduler(eos_id=eos_id)
+        self._key = jax.random.PRNGKey(seed)
+        self._bucketed = _full_attention_only(cfg)
+        self._cur_tok = np.zeros(num_slots, dtype=np.int64)
+        self._temps = np.zeros(num_slots, dtype=np.float32)
+        self.steps = 0          # decode steps executed (virtual clock)
+        self.tokens_out = 0     # total generated tokens
+
+        def prefill_into_slot(params, pool, prompt, length, slot, key,
+                              temperature):
+            """Fused admission: prefill [1, Sb], sample the first token
+            at the TRUE last prompt position length-1 (padded tail
+            positions are causally downstream and cannot affect it), and
+            scatter the KV rows into `slot` — one dispatch per
+            admission, no full-cache intermediate leaving the jit."""
+            h, caches, _ = lm.backbone_seq(
+                params, prompt, cfg, write_cache=True,
+                cache_len=max_seq_len,
+            )
+            h_last = jax.lax.dynamic_index_in_dim(h, length - 1, 1, keepdims=False)
+            logits = lm.logits_from_hidden(params, h_last, cfg)
+            tok = sample_token(logits, key, temperature)
+            pool = scatter_row(pool, caches, slot, length)
+            return tok, pool
+
+        self._prefill = jax.jit(prefill_into_slot, donate_argnums=(1,))
+
+        def step(params, tok, caches, pos, key, temps):
+            logits, caches = lm.decode_step(
+                params, tok, caches, pos, cfg,
+                decode_attn=blocks.local_decode_attn,
+            )
+            nxt = sample_token(logits, key, temps)
+            return nxt, caches
+
+        self._step = jax.jit(step, donate_argnums=(2,))
+
+    # -- API ---------------------------------------------------------------
+    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+               arrival_time: float = 0.0, on_token=None) -> int:
+        prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.pool.cache_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds the "
+                f"cache budget {self.pool.cache_len}"
+            )
+        req = Request(prompt=prompt, max_new=max_new, temperature=temperature,
+                      arrival_time=arrival_time, on_token=on_token)
+        self.scheduler.submit(req)
+        return req.id
+
+    def step(self) -> int:
+        """Admit arrived requests into free slots, then run one decode
+        step over the pool.  Returns the number of useful tokens
+        produced (admission prefills included)."""
+        produced = self._admit()
+        if self.scheduler.running:
+            produced += self._decode_once()
+        self.steps += 1
+        return produced
+
+    def run_until_drained(self) -> dict:
+        """Step until every submitted request has finished; the virtual
+        clock jumps over idle gaps to the next arrival.  Returns
+        {request_id: [tokens]}."""
+        while not self.scheduler.drained:
+            if not self.scheduler.running:
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None and nxt > self.steps:
+                    self.steps = int(np.ceil(nxt))
+            self.step()
+        return {r.id: list(r.tokens) for r in self.scheduler.finished}
+
+    # -- internals ---------------------------------------------------------
+    def _emit(self, req, tok: int) -> None:
+        req.tokens.append(tok)
+        self.tokens_out += 1
+        if req.on_token is not None:
+            req.on_token(req.id, tok)
+
+    def _admit(self) -> int:
+        produced = 0
+        while self.pool.n_free:
+            req = self.scheduler.next_admissible(self.steps)
+            if req is None:
+                break
+            slot = self.pool.alloc()
+            self.scheduler.bind(req, slot, self.steps)
+            L = len(req.prompt)
+            Sb = (bucket_len(L, cap=self.pool.cache_len)
+                  if self._bucketed else L)
+            padded = np.zeros((1, Sb), dtype=np.int64)
+            padded[0, :L] = req.prompt
+            self._key, sub = jax.random.split(self._key)
+            tok, new_pool = self._prefill(
+                self.params, self.pool.caches, jnp.asarray(padded),
+                jnp.int32(L), jnp.int32(slot), sub,
+                jnp.float32(req.temperature),
+            )
+            self.pool.install_prefill(slot, new_pool, L)
+            t0 = int(tok[0])
+            self._emit(req, t0)
+            produced += 1
+            if self.scheduler.should_retire(req):
+                self.scheduler.retire(slot, self.steps)
+                self.pool.free(slot)
+            else:
+                self._cur_tok[slot] = t0
+                self._temps[slot] = req.temperature
+        return produced
+
+    def _decode_once(self) -> int:
+        tok = jnp.asarray(np.where(self.pool.active, self._cur_tok, 0),
+                          jnp.int32)
+        pos = self.pool.pos_vector()
+        temps = jnp.asarray(np.where(self.pool.active, self._temps, 0.0),
+                            jnp.float32)
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.pool.caches = self._step(
+            self.params, tok, self.pool.caches, pos, sub, temps,
+        )
+        nxt = np.asarray(nxt)
+        produced = 0
+        for slot, req in list(self.scheduler.running.items()):
+            t = int(nxt[slot])
+            self._emit(req, t)
+            produced += 1
+            self.pool.advance(slot)
+            if self.scheduler.should_retire(req) or self.pool.room(slot) <= 0:
+                self.scheduler.retire(slot, self.steps)
+                self.pool.free(slot)
+            else:
+                self._cur_tok[slot] = t
+        return produced
