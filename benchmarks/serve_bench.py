@@ -1,5 +1,5 @@
-"""Continuous vs static batching under bursty traffic — the serving
-subsystem's reason to exist.
+"""Continuous vs static batching under bursty traffic, across KV-cache
+precisions — the serving subsystem's reason to exist.
 
 Workload: a Poisson-arrival mixed-length request stream
 (data/synthetic.serving_workload) served by the paper's recommended
@@ -20,10 +20,24 @@ token-identical per request before any number is reported.  Each path
 serves the workload twice THROUGH THE SAME Engine/Server instance (the
 jitted closures live per instance, so a fresh instance would recompile)
 and the second, compile-warm pass is timed.
+
+KV-cache precision (the tentpole knob, docs/serving.md): by default the
+bench sweeps kv_bits in {16, 8, 4} and reports, per precision, tok/s,
+resident KV HBM bytes, and the max-resident-slot count that fits the
+16-bit pool's HBM budget.  Quantized-cache serves are checked against
+the bf16-cache oracle with a TEACHER-FORCED per-token logit tolerance
+(serving.KV_LOGIT_TOL): the oracle's greedy tokens are replayed through
+the k-bit cache and every step's logits must stay within the bound —
+a deterministic criterion, unlike free-running token comparison, which
+can flip on near-ties.  At kv_bits=4 the bench additionally asserts
+the >= 3x KV-byte reduction the paper's bandwidth argument promises.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --kv-bits 4
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -34,7 +48,7 @@ from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
 from repro.models.quantize import quantize_params
-from repro.serving import Engine, Server
+from repro.serving import KV_LOGIT_TOL, Engine, Server, kv_oracle_logit_gap
 
 
 def _run_static(eng, reqs, *, num_slots):
@@ -81,7 +95,10 @@ def _run_continuous(srv, reqs):
 
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
-        rate=4.0, max_new_range=(8, 48), quantized=True, seed=0):
+        rate=4.0, max_new_range=(8, 48), quantized=True, seed=0,
+        kv_bits=None):
+    """kv_bits: None sweeps {16, 8, 4}; an int benches that precision
+    (16-bit KV bytes are still measured for the reduction ratio)."""
     cfg = get_arch(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     if quantized:
@@ -95,39 +112,96 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
     )
     max_seq_len = max(len(r["prompt"]) for r in reqs) + max_new_range[1]
     total_tokens = sum(r["max_new"] for r in reqs)
+    sweep = [16, 8, 4] if kv_bits is None else sorted({16, kv_bits},
+                                                      reverse=True)
     log(f"  {n_requests} requests, {total_tokens} tokens, "
-        f"poisson rate {rate}/step, {num_slots} slots")
+        f"poisson rate {rate}/step, {num_slots} slots, "
+        f"kv_bits sweep {sweep}")
 
-    # one instance per path (jit caches are per instance); pass 1
-    # compiles, pass 2 is timed compile-warm
-    eng = Engine(params, cfg, max_seq_len=max_seq_len)
-    srv = Server(params, cfg, num_slots=num_slots, max_seq_len=max_seq_len)
-    for _ in range(2):
-        out_s, dt_s = _run_static(eng, reqs, num_slots=num_slots)
-    for _ in range(2):
-        out_c, dt_c, cstats = _run_continuous(srv, reqs)
+    rows, stats = [], {}
+    bytes16 = None
+    for bits in sweep:
+        cfg_b = cfg.with_kv_quant(bits) if bits < 16 else cfg
+        srv = Server(params, cfg_b, num_slots=num_slots,
+                     max_seq_len=max_seq_len)
+        kvb = srv.pool.kv_bytes()
+        if bits == 16:
+            bytes16 = kvb["total"]
+        if kv_bits is not None and bits == 16 and kv_bits != 16:
+            # only the byte baseline is needed; skip the 16-bit serve
+            log(f"  kv16: {kvb['total']/1e6:7.3f} MB pool (byte baseline)")
+            continue
 
-    mismatches = [i for i in range(n_requests) if out_s[i] != out_c[i]]
-    if mismatches:
-        raise AssertionError(
-            f"greedy outputs diverge for requests {mismatches[:5]}"
-        )
-    tps_s = total_tokens / dt_s
-    tps_c = total_tokens / dt_c
-    speedup = tps_c / tps_s
-    log(f"  static:     {dt_s:.2f}s  {tps_s:8.1f} tok/s (offline-oracle grouping)")
-    log(f"  continuous: {dt_c:.2f}s  {tps_c:8.1f} tok/s  "
-        f"({cstats['steps']} steps, mean latency "
-        f"{cstats['mean_latency_steps']:.1f} steps)")
-    log(f"  speedup: {speedup:.2f}x (outputs token-identical)")
-    rows = [
-        ("serve/static", dt_s / total_tokens * 1e6, f"tok_s={tps_s:.1f}"),
-        ("serve/continuous", dt_c / total_tokens * 1e6, f"tok_s={tps_c:.1f}"),
-        ("serve/speedup", 0.0, f"x={speedup:.2f};outputs_match=1"),
-    ]
-    return rows, {"speedup": speedup, "tok_s_static": tps_s,
-                  "tok_s_continuous": tps_c}
+        # continuous: pass 1 compiles, pass 2 is timed compile-warm
+        for _ in range(2):
+            out_c, dt_c, cstats = _run_continuous(srv, reqs)
+        tps_c = total_tokens / dt_c
+
+        if bits == 16:
+            # offline-oracle static baseline + token-identity check
+            eng = Engine(params, cfg_b, max_seq_len=max_seq_len)
+            for _ in range(2):
+                out_s, dt_s = _run_static(eng, reqs, num_slots=num_slots)
+            mism = [i for i in range(n_requests) if out_s[i] != out_c[i]]
+            if mism:
+                raise AssertionError(
+                    f"greedy outputs diverge for requests {mism[:5]}"
+                )
+            tps_s = total_tokens / dt_s
+            speedup = tps_c / tps_s
+            log(f"  static:     {dt_s:.2f}s  {tps_s:8.1f} tok/s "
+                f"(offline-oracle grouping)")
+            rows.append(("serve/static", dt_s / total_tokens * 1e6,
+                         f"tok_s={tps_s:.1f}"))
+            stats.update({"tok_s_static": tps_s, "speedup": speedup})
+
+        slots_equal_hbm = int(num_slots * bytes16 / max(kvb["total"], 1))
+        line = (f"  kv{bits}: {dt_c:.2f}s {tps_c:8.1f} tok/s  "
+                f"{kvb['total']/1e6:7.3f} MB pool "
+                f"({kvb['per_token']:.1f} B/token, "
+                f"max {slots_equal_hbm} slots in the kv16 budget)")
+        if bits < 16:
+            ratio = bytes16 / kvb["total"]
+            n_probe = min(4, n_requests)
+            probe_len = min(len(r["prompt"]) for r in reqs[:n_probe])
+            probe = np.stack([r["prompt"][:probe_len]
+                              for r in reqs[:n_probe]])
+            gap, agree = kv_oracle_logit_gap(params, cfg_b, probe, 16)
+            tol = KV_LOGIT_TOL[bits]
+            line += (f"  {ratio:.2f}x fewer KV bytes, "
+                     f"logit gap {gap:.3f} (tol {tol}), "
+                     f"greedy agree {agree:.0%}")
+            assert gap < tol, (
+                f"kv{bits} logit gap {gap:.3f} exceeds tolerance {tol}"
+            )
+            if bits == 4:
+                assert ratio >= 3.0, (
+                    f"kv4 must cut KV HBM >= 3x vs kv16, got {ratio:.2f}x"
+                )
+            stats[f"kv{bits}_ratio"] = ratio
+            stats[f"kv{bits}_logit_gap"] = gap
+        log(line)
+        rows.append((f"serve/continuous_kv{bits}",
+                     dt_c / total_tokens * 1e6,
+                     f"tok_s={tps_c:.1f};kv_mb={kvb['total']/1e6:.3f};"
+                     f"slots_equal_hbm={slots_equal_hbm}"))
+        stats[f"tok_s_kv{bits}"] = tps_c
+
+    if "speedup" in stats:
+        log(f"  speedup: {stats['speedup']:.2f}x "
+            f"(outputs token-identical at kv16)")
+        rows.append(("serve/speedup", 0.0,
+                     f"x={stats['speedup']:.2f};outputs_match=1"))
+    return rows, stats
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-bits", type=int, default=None, choices=[4, 8, 16],
+                    help="bench one KV precision (default: sweep 16/8/4)")
+    ap.add_argument("--arch", default="tiny-160k")
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--num-requests", type=int, default=48)
+    args = ap.parse_args()
+    run(arch=args.arch, num_slots=args.num_slots,
+        n_requests=args.num_requests, kv_bits=args.kv_bits)

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links (and their #anchors) resolve.
+
+Scans every *.md file in the repo for inline links, resolves relative
+targets against the file's directory, and fails if a target file is
+missing or a referenced heading anchor does not exist in the target.
+External (http/mailto) links are ignored — CI must not depend on the
+network.  Run from the repo root:
+
+    python scripts/check_markdown_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_DIRS = {".git", "artifacts", "node_modules", "__pycache__"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading -> anchor."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)  # drop punctuation, keep word chars/-/space
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    text = md_path.read_text(encoding="utf-8")
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = []
+    md_files = [
+        p for p in root.rglob("*.md")
+        if not any(part in SKIP_DIRS for part in p.parts)
+    ]
+    for md in md_files:
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            rel = md.relative_to(root)
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if frag not in anchors_of(dest):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    if errors:
+        print(f"{len(errors)} broken markdown link(s):")
+        for e in errors:
+            print(" ", e)
+        return 1
+    print(f"ok: {len(md_files)} markdown files, all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing.
 
-Design points for 1000+-node operation (DESIGN.md §4):
+Design points for 1000+-node operation:
   * atomic commits — write to a temp dir, fsync, os.replace; a crash
     mid-save can never corrupt the latest checkpoint
   * async saves — the train loop donates a host snapshot and keeps

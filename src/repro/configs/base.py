@@ -64,6 +64,18 @@ class ArchConfig:
 
     dtype: str = "bfloat16"
 
+    # KV-cache quantization — a serving-time knob, not an architecture
+    # property (set it via with_kv_quant() at launch; the arch name is
+    # unchanged).  16 keeps the dense bf16 cache; 8/4 store each cached
+    # token as packed k-bit codes + per-block absmax scales, the same
+    # blockwise machinery as the weights (docs/quantization.md#the-k-bit-
+    # quantized-kv-cache).  Blocks run along the per-token feature dim
+    # (n_kv_heads * head_dim), clamped to it when smaller.
+    kv_bits: int = 16                # 16 (bf16 cache) | 8 | 4
+    kv_block_size: int = 64
+    kv_dtype: str = "float"          # int | float | dynamic (not quantile)
+    kv_use_kernel: bool = False      # Pallas dequant (TPU); False = pure JAX
+
     # ---- derived ------------------------------------------------------
     @property
     def d_inner(self) -> int:
@@ -83,7 +95,7 @@ class ArchConfig:
 
         True when every attention layer is windowed or there is no
         attention at all; hybrid counts because its rare attention layers
-        carry a seq-sharded linear-cost cache (see DESIGN.md).
+        carry a seq-sharded linear-cost cache (models/sharding.py).
         """
         if self.is_attention_free:
             return True
@@ -138,6 +150,26 @@ class ArchConfig:
         from repro.models.lm import count_params
 
         return count_params(self, active_only=True)
+
+    def with_kv_quant(self, bits: int, *, block_size: int | None = None,
+                      dtype: str | None = None,
+                      use_kernel: bool | None = None) -> "ArchConfig":
+        """Same arch with a k-bit KV cache. bits=16 restores the bf16 cache."""
+        if bits not in (4, 8, 16):
+            raise ValueError(f"kv_bits must be 4, 8 or 16, got {bits}")
+        kv_dtype = dtype if dtype is not None else self.kv_dtype
+        if kv_dtype == "quantile":
+            raise ValueError(
+                "quantile codebooks are data-dependent; the streaming "
+                "append-quantize needs a static codebook (int/float/dynamic)"
+            )
+        return dataclasses.replace(
+            self,
+            kv_bits=bits,
+            kv_block_size=block_size if block_size is not None else self.kv_block_size,
+            kv_dtype=kv_dtype,
+            kv_use_kernel=use_kernel if use_kernel is not None else self.kv_use_kernel,
+        )
 
     def reduced(self, **overrides) -> "ArchConfig":
         """A smoke-test-sized config of the same family (small dims, same
@@ -211,7 +243,7 @@ SHAPES = {
 
 
 def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
-    """Which (arch x shape) cells run; skips documented in DESIGN.md."""
+    """Which (arch x shape) cells run; the reason string documents skips."""
     if shape.name == "long_500k" and not arch.sub_quadratic:
         return False, "long_500k needs sub-quadratic attention (full-attn arch)"
     if (

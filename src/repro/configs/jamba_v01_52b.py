@@ -4,7 +4,7 @@
 [arXiv:2403.19887; hf]
 
 Jamba-v0.1 uses Mamba-1 internally; we realize the mamba layers with the
-SSD formulation (same selective-SSM family, d_state=16) — see DESIGN.md §5.
+SSD formulation (same selective-SSM family, d_state=16) — models/ssm.py.
 """
 
 from repro.configs.base import ArchConfig

@@ -1,6 +1,7 @@
 """The paper's own model family, CPU-scale: a ladder of tiny llama-style LMs
 used to build the bit-level scaling laws (stand-in for OPT/Pythia/BLOOM/
-GPT-2, which cannot be downloaded offline — see DESIGN.md §6/§8).
+GPT-2, which cannot be downloaded offline; trained on the synthetic
+Zipf-Markov corpus, data/synthetic.py).
 
 Four sizes spanning ~16x in parameters, trained for a few hundred steps on
 the synthetic Zipf-Markov corpus, then quantized at every (k, dtype, block)

@@ -4,7 +4,8 @@ A power-law unigram distribution composed with low-rank bigram structure —
 language-like enough that (a) tiny LMs learn a nontrivial conditional
 distribution (loss well below the unigram entropy) and (b) quantization
 noise degrades held-out perplexity smoothly, which is all the paper's
-scaling-law methodology needs (DESIGN.md §6).
+scaling-law methodology needs (docs/quantization.md#which-benchmark-
+reproduces-which-paper-figure).
 
 Everything is generated from a seed; no files, fully reproducible, and
 token generation is O(1) memory via jax.random.

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the paper's perf-critical layer: fused k-bit
-dequantize-matmul (the memory-bound decode hot spot) and blockwise encode.
+dequantize-matmul (the memory-bound decode hot spot), blockwise encode,
+and the packed KV-cache dequant (`kv_dequant`, serving read path).
 `ops` holds the jit'd wrappers; `ref` the pure-jnp oracles."""
 
+from repro.kernels.kv_dequant import KVQuantSpec, kv_spec
 from repro.kernels.ops import (
     operand_from_qtensor,
     prepare_operand,
@@ -11,7 +13,9 @@ from repro.kernels.ops import (
 from repro.kernels.ref import QMatmulOperand, qmatmul_ref
 
 __all__ = [
+    "KVQuantSpec",
     "QMatmulOperand",
+    "kv_spec",
     "operand_from_qtensor",
     "prepare_operand",
     "qmatmul",

@@ -1,0 +1,19 @@
+"""Version shims for Pallas TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5; the repo supports both so kernels import one helper instead of
+version-guarding at every pallas_call site.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """CompilerParams under whichever name this jax version exports."""
+    return _PARAMS_CLS(**kwargs)

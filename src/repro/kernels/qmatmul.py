@@ -6,7 +6,8 @@ PACKED k-bit codes (uint32 words) + 16-bit per-block scales into VMEM —
 k/16 of the bf16 traffic — dequantizes tile-by-tile on the VPU, and feeds
 the MXU with bf16/f32 tiles.
 
-Layout (matches models/quantize.py transposed storage; see DESIGN.md §3):
+Layout (matches models/quantize.py transposed storage; see
+docs/quantization.md#packing-layout-corepackingpy):
   x       [M, K]            activations (bf16/f32)
   packed  [N, K//cpw]       uint32, cpw = 32//bits codes per word along K
   scales  [N, K//B]         per-(column, K-block) absmax constants
@@ -17,7 +18,7 @@ Grid (M/bm, N/bn, K/bk), K innermost with an f32 VMEM accumulator.
 bk must be a multiple of lcm(cpw, B) so packed words and scale blocks
 never straddle a tile.
 
-Dequantization on TPU (DESIGN.md §3 — no gather):
+Dequantization on TPU (docs/quantization.md#kernels-kernels — no gather):
   * `int` data type: pure arithmetic (codes are affine in the value).
   * LUT types (float/dynamic/quantile): compare-accumulate select tree
     over the 2**bits codebook entries — vectorized VPU selects, no
@@ -33,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
 
 
 def _unpack_tile(words, bits: int, bk: int):
@@ -123,7 +126,7 @@ def qmatmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

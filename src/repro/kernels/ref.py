@@ -3,7 +3,7 @@
 These define the semantics the kernels must match bit-for-bit (up to f32
 accumulation order), and are also the execution path used on CPU and in
 the dry-run (pallas_call cannot compile on the CPU backend outside
-interpret mode — DESIGN.md §7).
+interpret mode — docs/quantization.md#kernels-kernels).
 """
 
 from __future__ import annotations

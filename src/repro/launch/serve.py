@@ -58,6 +58,12 @@ def main():
                     choices=["int", "float", "dynamic", "quantile", "fp16"])
     ap.add_argument("--block-size", type=int, default=64)
     ap.add_argument("--outlier-pct", type=float, default=0.0)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16],
+                    help="KV-cache precision: 16 = bf16 cache, 8/4 = "
+                         "blockwise-quantized packed cache")
+    ap.add_argument("--kv-block-size", type=int, default=64)
+    ap.add_argument("--kv-dtype", default="float",
+                    choices=["int", "float", "dynamic"])
     ap.add_argument("--mode", choices=["continuous", "static"],
                     default="continuous")
     # static-mode flags (None = unset, so continuous mode can reject
@@ -76,6 +82,10 @@ def main():
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
+    if args.kv_bits < 16:
+        cfg = cfg.with_kv_quant(args.kv_bits, block_size=args.kv_block_size,
+                                dtype=args.kv_dtype)
+        print(f"kv cache: {args.kv_dtype}{args.kv_bits}-b{args.kv_block_size}")
     if args.ckpt_dir:
         params = load_params(cfg, args.ckpt_dir)
     else:

@@ -24,6 +24,15 @@ to a PER-ROW vector [B]: ``pos`` may be [B] (each batch row decodes at its
 own absolute position; -1 = idle row) and the cache's ``pos`` array may be
 [B, S_c] (per-slot occupancy, docs/serving.md).  Every decode entry point
 below dispatches on ``pos.ndim`` so the legacy scalar path is untouched.
+
+k-bit caches (cfg.kv_bits in {4, 8}) swap the dense k/v leaves for packed
+codes + per-block absmax scales (kernels/kv_dequant.py defines the layout):
+{"k_packed","k_scales","v_packed","v_scales": [B, S_c, ...], "pos": ...}.
+Writes quantize the new token inside the jitted step (append-quantize);
+reads dequantize the local cache slice before the same masked partial
+math, so the pos/idle-row semantics above hold verbatim.  Every entry
+point takes an optional ``kvq`` KVQuantSpec and dispatches on it plus the
+cache keys — a None spec is byte-for-byte the legacy bf16 path.
 """
 
 from __future__ import annotations
@@ -33,9 +42,14 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_dequant
 from repro.models.layers import apply_rope, dense, init_dense, rmsnorm, softcap
 
 NEG_INF = -1e30
+
+
+def _is_quantized_cache(cache: dict) -> bool:
+    return "k_packed" in cache
 
 
 # --------------------------------------------------------------------------
@@ -192,16 +206,29 @@ def flash_attention(
 # --------------------------------------------------------------------------
 
 def init_kv_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
-                  per_slot: bool = False) -> dict:
+                  per_slot: bool = False, kvq=None) -> dict:
     """per_slot=True gives each batch row its own position array [B, S_c]
     (continuous batching: rows hold independent requests at independent
-    positions).  Default keeps the shared [S_c] layout."""
+    positions).  Default keeps the shared [S_c] layout.  A KVQuantSpec
+    `kvq` swaps the dense k/v leaves for packed codes + scales; stale
+    code words are harmless because pos=-1 masks the whole entry."""
     K, Dh = cfg.n_kv_heads, cfg.head_dim
     pos_shape = (batch, cache_len) if per_slot else (cache_len,)
+    pos = jnp.full(pos_shape, -1, jnp.int32)
+    if kvq is not None:
+        feat = K * Dh
+        _, n_blocks, n_words = kv_dequant.kv_layout(kvq, feat)
+        return {
+            "k_packed": jnp.zeros((batch, cache_len, n_words), jnp.uint32),
+            "k_scales": jnp.zeros((batch, cache_len, n_blocks), jnp.bfloat16),
+            "v_packed": jnp.zeros((batch, cache_len, n_words), jnp.uint32),
+            "v_scales": jnp.zeros((batch, cache_len, n_blocks), jnp.bfloat16),
+            "pos": pos,
+        }
     return {
         "k": jnp.zeros((batch, cache_len, K, Dh), dtype),
         "v": jnp.zeros((batch, cache_len, K, Dh), dtype),
-        "pos": jnp.full(pos_shape, -1, jnp.int32),
+        "pos": pos,
     }
 
 
@@ -212,7 +239,8 @@ def cache_slot(pos, cache_len: int, window: int):
     return pos
 
 
-def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0) -> dict:
+def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0,
+                       kvq=None) -> dict:
     """Write one token's K/V at absolute position `pos`.
 
     pos is a traced scalar (all rows share the position, legacy batch
@@ -220,8 +248,42 @@ def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0) -> di
     (continuous batching).  Vector rows with pos < 0 are idle slots: the
     write lands at a clamped slot with pos=-1, i.e. an entry that the
     attention mask treats as empty — idle rows stay inert.
+
+    With a KVQuantSpec this is the APPEND-QUANTIZE path: the new token's
+    K/V rows are blockwise-encoded inside the same jitted step and only
+    the packed codes + scales are written — the bf16 values of a cached
+    token never touch HBM.
     """
     pos = jnp.asarray(pos, jnp.int32)
+    if kvq is not None and _is_quantized_cache(cache):
+        B = k_new.shape[0]
+        feat = k_new.shape[-2] * k_new.shape[-1]
+        kp, ks = kv_dequant.encode_rows(k_new.reshape(B, feat), kvq)
+        vp, vs = kv_dequant.encode_rows(v_new.reshape(B, feat), kvq)
+        S_c = cache["k_packed"].shape[1]
+        if pos.ndim == 0:
+            slot = cache_slot(pos, S_c, window)
+            out = {
+                key: jax.lax.dynamic_update_slice_in_dim(
+                    cache[key], val[:, None], slot, axis=1
+                )
+                for key, val in (("k_packed", kp), ("k_scales", ks),
+                                 ("v_packed", vp), ("v_scales", vs))
+            }
+            out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[None], slot, axis=0
+            )
+            return out
+        assert cache["pos"].ndim == 2, "vector pos needs a per-slot cache"
+        slot = jnp.clip(cache_slot(pos, S_c, window), 0, S_c - 1)
+        rows = jnp.arange(B)
+        out = {
+            key: cache[key].at[rows, slot].set(val)
+            for key, val in (("k_packed", kp), ("k_scales", ks),
+                             ("v_packed", vp), ("v_scales", vs))
+        }
+        out["pos"] = cache["pos"].at[rows, slot].set(pos)
+        return out
     S_c = cache["k"].shape[1]
     if pos.ndim == 0:
         slot = cache_slot(pos, S_c, window)
@@ -241,9 +303,37 @@ def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0) -> di
     return {"k": k, "v": v, "pos": p}
 
 
-def write_cache_prefill(cache: dict, k_seq, v_seq, *, window: int = 0) -> dict:
-    """Write a prefilled sequence [B,S,K,Dh] into slots [0..S) (or the ring)."""
+def write_cache_prefill(cache: dict, k_seq, v_seq, *, window: int = 0,
+                        kvq=None) -> dict:
+    """Write a prefilled sequence [B,S,K,Dh] into slots [0..S) (or the ring).
+
+    Quantized caches encode every token row first; blocks never span
+    tokens, so the per-position ring scatter is identical to the bf16 one.
+    """
     B, S = k_seq.shape[:2]
+    if kvq is not None and _is_quantized_cache(cache):
+        feat = k_seq.shape[-2] * k_seq.shape[-1]
+        kp, ks = kv_dequant.encode_rows(k_seq.reshape(B, S, feat), kvq)
+        vp, vs = kv_dequant.encode_rows(v_seq.reshape(B, S, feat), kvq)
+        leaves = (("k_packed", kp), ("k_scales", ks),
+                  ("v_packed", vp), ("v_scales", vs))
+        S_c = cache["k_packed"].shape[1]
+        if window and window <= S_c and S > S_c:
+            positions = jnp.arange(S - S_c, S, dtype=jnp.int32)
+            slots = positions % S_c
+            order = jnp.argsort(slots)
+            out = {
+                key: cache[key].at[:, slots[order]].set(val[:, -S_c:][:, order])
+                for key, val in leaves
+            }
+            out["pos"] = cache["pos"].at[slots[order]].set(positions[order])
+            return out
+        out = {
+            key: jax.lax.dynamic_update_slice_in_dim(cache[key], val, 0, axis=1)
+            for key, val in leaves
+        }
+        out["pos"] = cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))
+        return out
     S_c = cache["k"].shape[1]
     if window and window <= S_c and S > S_c:
         # keep only the last S_c positions, ring-aligned
@@ -315,11 +405,33 @@ def combine_partials(m, l, pv, axis_name: str | None):
     return pv_g / jnp.maximum(l_g, 1e-30)[..., None]
 
 
-def decode_attention(q, cache, pos, *, cap=0.0, window=0):
-    """Unsharded single-token attention against a cache (CPU/test path)."""
-    m, l, pv = decode_attention_partial(
-        q, cache["k"], cache["v"], cache["pos"], pos, cap=cap, window=window
-    )
+def dequant_cache_kv(cache: dict, kvq, n_kv_heads: int, head_dim: int):
+    """Materialize bf16 k/v [B, S_c, K, Dh] from a packed cache — the
+    dequant-attention read path (Pallas kernel when kvq.use_kernel, jnp
+    oracle otherwise; kernels/kv_dequant.py)."""
+    feat = n_kv_heads * head_dim
+    shape = cache["k_packed"].shape[:2] + (n_kv_heads, head_dim)
+    k = kv_dequant.dequant_rows(
+        cache["k_packed"], cache["k_scales"], kvq, feat
+    ).reshape(shape)
+    v = kv_dequant.dequant_rows(
+        cache["v_packed"], cache["v_scales"], kvq, feat
+    ).reshape(shape)
+    return k, v
+
+
+def decode_attention(q, cache, pos, *, cap=0.0, window=0, kvq=None):
+    """Unsharded single-token attention against a cache (CPU/test path).
+    Packed caches are dequantized into the same masked partial math, so
+    pos/idle-row semantics are shared with the bf16 path."""
     B, H, Dh = q.shape
+    if kvq is not None and _is_quantized_cache(cache):
+        feat = cache["k_packed"].shape[-1] * (32 // kvq.bits)
+        k_cache, v_cache = dequant_cache_kv(cache, kvq, feat // Dh, Dh)
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+    m, l, pv = decode_attention_partial(
+        q, k_cache, v_cache, cache["pos"], pos, cap=cap, window=window
+    )
     o = combine_partials(m, l, pv, None)
     return o.reshape(B, H, Dh).astype(q.dtype)

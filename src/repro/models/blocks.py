@@ -16,6 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.kv_dequant import kv_spec
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -74,7 +75,8 @@ def init_layer_cache(mixer: str, cfg, batch: int, cache_len: int, dtype=jnp.bflo
     if mixer.startswith("attn"):
         w = _mixer_window(mixer, cfg)
         eff = min(cache_len, w) if w else cache_len
-        return attn_mod.init_kv_cache(cfg, batch, eff, dtype, per_slot=per_slot)
+        return attn_mod.init_kv_cache(cfg, batch, eff, dtype,
+                                      per_slot=per_slot, kvq=kv_spec(cfg))
     return ssm_mod.init_ssm_cache(cfg, batch, dtype)
 
 
@@ -91,7 +93,7 @@ def apply_layer_seq(
         q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions)
         H = cfg.n_heads
         if q_pad and q_pad != H:
-            # zero-pad q heads so heads shard evenly over TP (DESIGN.md §4);
+            # zero-pad q heads so heads shard evenly over TP (sharding.py);
             # dummy heads attend uniformly and are sliced away below.
             B, S, _, Dh = q.shape
             q = jnp.concatenate(
@@ -112,8 +114,10 @@ def apply_layer_seq(
             w = _mixer_window(mixer, cfg)
             total = max(cache_len or S, S)
             eff = min(total, w) if w else total
-            cache = attn_mod.init_kv_cache(cfg, B, eff, k.dtype)
-            cache_out = attn_mod.write_cache_prefill(cache, k, v, window=w)
+            kvq = kv_spec(cfg)
+            cache = attn_mod.init_kv_cache(cfg, B, eff, k.dtype, kvq=kvq)
+            cache_out = attn_mod.write_cache_prefill(cache, k, v, window=w,
+                                                     kvq=kvq)
     else:
         o, tail = ssm_mod.ssm_block(p["mixer"], h, cfg, constrain=constrain)
         if write_cache:
@@ -148,8 +152,11 @@ def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_a
         positions = pos_v[:, None] if pos_v.ndim else pos_v[None]
         q, k, v = attn_mod.project_qkv(p["mixer"], h[:, None, :], cfg, positions)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        kvq = kv_spec(cfg)
+        kv_kw = {} if kvq is None else {"kvq": kvq}
         o, cache = decode_attn(
-            q, k, v, cache, pos, cap=cfg.attn_logit_softcap, window=window
+            q, k, v, cache, pos, cap=cfg.attn_logit_softcap, window=window,
+            **kv_kw,
         )
         o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], -1))
     else:
@@ -171,11 +178,14 @@ def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_a
     return x, cache
 
 
-def local_decode_attn(q, k_new, v_new, cache, pos, *, cap, window):
+def local_decode_attn(q, k_new, v_new, cache, pos, *, cap, window, kvq=None):
     """Unsharded cache write + attend (CPU/tests; sharded version in
-    models/sharding.py)."""
-    cache = attn_mod.write_cache_decode(cache, k_new, v_new, pos, window=window)
-    o = attn_mod.decode_attention(q, cache, pos, cap=cap, window=window)
+    models/sharding.py).  kvq routes through the append-quantize write and
+    the dequant read of a packed cache."""
+    cache = attn_mod.write_cache_decode(cache, k_new, v_new, pos,
+                                        window=window, kvq=kvq)
+    o = attn_mod.decode_attention(q, cache, pos, cap=cap, window=window,
+                                  kvq=kvq)
     return o, cache
 
 

@@ -21,7 +21,8 @@ def linear(x: jnp.ndarray, w, bias=None) -> jnp.ndarray:
 
     `w` is either a jnp array [in, out] or a QuantizedTensor storing the
     TRANSPOSED weight (quant_shape == (out, in)): transposed storage makes
-    the block axis the reduction dim (kernel layout, DESIGN.md §3) and the
+    the block axis the reduction dim (kernel layout,
+    docs/quantization.md#packing-layout-corepackingpy) and the
     16-bit dequant transient is consumed immediately by the einsum.
     """
     if isinstance(w, QuantizedTensor):

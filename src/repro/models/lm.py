@@ -176,4 +176,8 @@ def decode_step(params, token, caches, pos, cfg, *, constrain=NO_CONSTRAIN,
 
 def init_caches(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
                 *, per_slot: bool = False):
+    """Decode-cache pytree for `cfg`.  `dtype` is the dense k/v (and scale)
+    dtype; when cfg.kv_bits < 16 the attention leaves are packed codes +
+    per-block scales instead (kernels/kv_dequant.py layout) — callers
+    never branch on this, the cache entry points dispatch internally."""
     return blocks.init_stack_cache(cfg, batch, cache_len, dtype, per_slot=per_slot)

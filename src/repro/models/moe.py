@@ -3,7 +3,8 @@
 Dispatch is scatter/gather (token -> (expert, slot) indices computed via a
 cumulative position-in-expert), NOT a dense one-hot einsum: a one-hot
 dispatch contraction costs O(T*E*C*D) fake FLOPs that would swamp the HLO
-compute roofline (DESIGN.md).  Experts are sharded over the `model` mesh
+compute roofline (benchmarks/roofline.py counts real FLOPs only).
+Experts are sharded over the `model` mesh
 axis (expert parallelism); the scatter into the [E, C, D] buffer is the
 token all-to-all under GSPMD.
 

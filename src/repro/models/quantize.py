@@ -8,15 +8,16 @@ Vectors (norms, biases, conv filters, SSM scalars) and the MoE router stay
 
 2-D weights [In, Out] are stored TRANSPOSED in the QuantizedTensor
 ([Out, In]) so quantization blocks run along the reduction dim — the
-Pallas kernel layout (DESIGN.md §3); the paper's bits accounting is
-unchanged by the layout.
+Pallas kernel layout (docs/quantization.md#packing-layout-corepackingpy);
+the paper's bits accounting is unchanged by the layout.
 
 Proxy quantization (§3, Eq. 2): producer-weight std picks the outlier
 input dims kept in 16-bit.  Within-block producers are exact (w_down <-
 w_up, wo <- wv with GQA group tiling); residual-stream consumers share one
 model-wide outlier set J_residual from the mean producer std across layers
 (emergent outliers are global across layers — Dettmers et al. 2022a); this
-adaptation is noted in DESIGN.md §8.
+adaptation is documented in docs/quantization.md#proxy-quantization-
+coreproxypy-modelsquantizepy.
 """
 
 from __future__ import annotations

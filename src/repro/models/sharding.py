@@ -9,8 +9,9 @@ Training / prefill
     divisible by the TP degree (deepseek 56H, qwen2 28H) get ZERO-PADDED
     q-heads up to the next multiple of lcm(tp, kv) — 14% extra attention
     FLOPs, visible in the roofline's MODEL_FLOPS/HLO ratio, in exchange
-    for exact-causal chunked attention and uniform head-TP (the
-    context-parallel alternative is discussed in DESIGN.md).
+    for exact-causal chunked attention and uniform head-TP (a
+    context-parallel split would avoid the padding but costs an extra
+    collective per layer).
   * MoE: experts over "model" (EP)
 
 Decode
@@ -281,7 +282,12 @@ class Sharder:
         s_size = self._axis_size(s_ax)
         mesh = self.mesh
 
-        def fn(q, k_new, v_new, cache, pos, *, cap, window):
+        def fn(q, k_new, v_new, cache, pos, *, cap, window, kvq=None):
+            if kvq is not None:
+                raise NotImplementedError(
+                    "sequence-sharded decode serves bf16 caches; "
+                    "kv_bits < 16 is single-device (serving/server.py)"
+                )
             S_total = cache["k"].shape[1]
             if S_total % s_size != 0:
                 from repro.models.blocks import local_decode_attn

@@ -2,7 +2,7 @@
 
 Used by mamba2-130m (all layers) and jamba-v0.1 (7 of every 8 layers; Jamba
 ships Mamba-1 — we realize it with the SSD formulation of the same
-selective-SSM family, see DESIGN.md §5).
+selective-SSM family; configs/jamba_v01_52b.py records the adaptation).
 
 Train/prefill uses the chunked SSD algorithm (quadratic within chunks of
 length Q, linear scan across chunks); decode is the O(1) recurrence

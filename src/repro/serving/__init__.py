@@ -1,9 +1,16 @@
-from repro.serving.engine import Engine, perplexity, sample_token
+from repro.serving.engine import (
+    KV_LOGIT_TOL,
+    Engine,
+    kv_oracle_logit_gap,
+    perplexity,
+    sample_token,
+)
 from repro.serving.kvcache import SlotKVCache
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.server import Server, bucket_len
 
 __all__ = [
-    "Engine", "perplexity", "sample_token",
-    "SlotKVCache", "Scheduler", "Request", "Server", "bucket_len",
+    "Engine", "KV_LOGIT_TOL", "kv_oracle_logit_gap", "perplexity",
+    "sample_token", "SlotKVCache", "Scheduler", "Request", "Server",
+    "bucket_len",
 ]

@@ -14,6 +14,12 @@ oracle for the continuous-batching subsystem (server.py + kvcache.py +
 scheduler.py), which serves mixed-length asynchronous request streams
 over a slot pool with per-row positions — see docs/serving.md for the
 slot/scheduler design and when to prefer each path.
+
+cfg.kv_bits < 16 is honored here too (the scalar-pos branches of the
+same cache entry points): an Engine at kv_bits=16 is the bf16-cache
+oracle the quantized serve is toleranced against, and an Engine at the
+SAME kv_bits must be token-identical to the Server — cache quantization
+is per token-row, so batching composition still cannot change outputs.
 """
 
 from __future__ import annotations
@@ -24,6 +30,48 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import blocks, lm
+
+#: stated per-token logit tolerance of a k-bit KV cache vs the bf16-cache
+#: oracle (tiny family, float codebook, block 64) — the acceptance bound
+#: used by benchmarks/serve_bench.py and tests/test_kvquant.py, and the
+#: number documented in docs/serving.md.
+KV_LOGIT_TOL = {8: 0.2, 4: 1.0}
+
+
+def kv_oracle_logit_gap(params, cfg_q, prompts, n_steps):
+    """Teacher-forced per-token logit gap of cfg_q's k-bit KV cache vs
+    the bf16-cache oracle.
+
+    Rolls the bf16-cache model greedily over `prompts` [B, S], then
+    replays the SAME token sequence through the k-bit cache — a
+    deterministic comparison, unlike free-running token matching, which
+    flips on near-ties.  Returns (max |logit gap| over all steps
+    including prefill, greedy-agreement fraction)."""
+    import numpy as np
+
+    cfg16 = cfg_q.with_kv_quant(16)
+    cache_len = prompts.shape[1] + n_steps
+
+    def rollout(c, force=None):
+        logits, caches = lm.prefill(params, jnp.asarray(prompts), c,
+                                    cache_len=cache_len)
+        toks, logs = [], [np.asarray(logits, np.float32)]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+        for t in range(n_steps - 1):
+            feed = tok if force is None else jnp.asarray(force[t])
+            logits, caches = lm.decode_step(
+                params, feed, caches, jnp.int32(prompts.shape[1] + t), c)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(np.asarray(tok))
+            logs.append(np.asarray(logits, np.float32))
+        return np.stack(toks), np.stack(logs)
+
+    toks16, logs16 = rollout(cfg16)
+    toksq, logsq = rollout(cfg_q, force=toks16)
+    gap = float(np.abs(logs16 - logsq).max())
+    agree = float((toks16 == toksq).mean())
+    return gap, agree
 
 
 def sample_token(logits, key, temperature):

@@ -23,6 +23,15 @@ padded positions >= prompt_len must read as empty (-1) or the slot would
 attend to junk.  The validity test is on the *stored position values*
 (0 <= p < prompt_len), which is correct for both full caches and
 sliding-window ring caches.
+
+k-bit caches (cfg.kv_bits in {4, 8}) change only the LEAVES: the pool
+tree holds packed codes + per-block scales instead of dense k/v
+(kernels/kv_dequant.py), every leaf still shaped [n_p, B, S_c, ...].
+The generic row write in `scatter_row` moves packed leaves untouched,
+and the pos-based invalidation covers them for free — a padded tail's
+stale code words are unreachable behind pos=-1.  `kv_bytes()` reports
+the resident HBM cost, the number the kv_bits knob exists to shrink
+(docs/serving.md).
 """
 
 from __future__ import annotations
@@ -119,3 +128,18 @@ class SlotKVCache:
     def room(self, slot: int) -> int:
         """Decode positions left before this slot hits the cache budget."""
         return self.cache_len - int(self.next_pos[slot])
+
+    def kv_bytes(self) -> dict:
+        """Resident HBM bytes of the pool's attention KV leaves (packed
+        codes + scales for quantized caches, dense k/v otherwise; pos and
+        SSM state excluded — they are identical across kv_bits)."""
+        kv_keys = {"k", "v", "k_packed", "k_scales", "v_packed", "v_scales"}
+        total = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.caches):
+            if any(getattr(k, "key", None) in kv_keys for k in path):
+                total += leaf.size * leaf.dtype.itemsize
+        return {
+            "total": total,
+            "per_slot": total / max(self.num_slots, 1),
+            "per_token": total / max(self.num_slots * self.cache_len, 1),
+        }

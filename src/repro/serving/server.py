@@ -10,16 +10,27 @@ the decode batch mid-flight with no recompilation and no effect on the
 other rows (docs/serving.md).
 
 Restrictions: prompt-length bucketing (padding) is only enabled when
-every mixer is full attention — padded positions are provably masked out
-of a causal full-attention cache, but would corrupt SSM tail states and
-sliding-window ring buffers, so those archs prefill at exact prompt
-length (one compile per distinct length).  Sharded (multi-host) decode
+every mixer is full attention and the FFNs are dense — padded positions
+are provably masked out of a causal full-attention cache, but would
+corrupt SSM tail states and sliding-window ring buffers, and MoE
+capacity dispatch is cross-token (junk tokens shift real tokens'
+expert keep/drop), so those archs prefill at exact prompt length (one
+compile per distinct length).  Sharded (multi-host) decode
 still goes through the static Engine path; continuous batching is
 single-device for now.
 
 Works unchanged for quantized param trees: the decode/prefill fns are
 the same lm.py entry points the static Engine uses, and quantization is
 invisible above the in-layer dequant.
+
+The KV cache itself can be k-bit too (cfg.kv_bits in {4, 8}, e.g.
+``cfg.with_kv_quant(4)``): pool leaves become packed codes + per-block
+scales, each decode step append-quantizes the new token inside the same
+jitted step, and the attention read path dequantizes (Pallas kernel on
+TPU, jnp oracle on CPU) — kernels/kv_dequant.py, docs/serving.md.  The
+pool pytree still never changes shape, so compile-once-per-bucket and
+the scatter-based admission are untouched; ``pool.kv_bytes()`` shows
+the ~16/k HBM saving that buys more slots or longer contexts.
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.kv_dequant import kv_spec
 from repro.models import blocks, lm
 from repro.serving.engine import sample_token
 from repro.serving.kvcache import SlotKVCache, scatter_row
@@ -43,8 +55,13 @@ def bucket_len(n: int, *, minimum: int = 8, cap: int | None = None) -> int:
     return min(b, cap) if cap is not None else b
 
 
-def _full_attention_only(cfg) -> bool:
-    return all(
+def _bucketing_safe(cfg) -> bool:
+    """Padded prefill is provably inert only when every mixer is causal
+    full attention AND there is no MoE: SSM tail states and ring buffers
+    would absorb the padding, and MoE capacity dispatch is cross-token —
+    junk tokens compete for expert capacity and shift real tokens'
+    keep/drop decisions, breaking the Engine==Server identity."""
+    return cfg.n_experts == 0 and all(
         m.startswith("attn") and blocks._mixer_window(m, cfg) == 0
         for m, _ in cfg.layer_schedule()
     )
@@ -61,10 +78,11 @@ class Server:
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id
+        self.kvq = kv_spec(cfg)  # None = bf16 cache; else packed k-bit
         self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype)
         self.scheduler = Scheduler(eos_id=eos_id)
         self._key = jax.random.PRNGKey(seed)
-        self._bucketed = _full_attention_only(cfg)
+        self._bucketed = _bucketing_safe(cfg)
         self._cur_tok = np.zeros(num_slots, dtype=np.int64)
         self._temps = np.zeros(num_slots, dtype=np.float32)
         self.steps = 0          # decode steps executed (virtual clock)

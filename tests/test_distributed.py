@@ -98,6 +98,10 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_sharded_decode_matches_unsharded_subprocess():
+    import jax
+
+    if not hasattr(jax, "shard_map"):
+        pytest.skip("sharded decode needs top-level jax.shard_map (jax >= 0.5)")
     script = _SUBPROCESS_SCRIPT.format(src=SRC)
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600)

@@ -133,6 +133,31 @@ def test_pool_alloc_free_errors(params):
     assert pool.alloc() == a
 
 
+def test_moe_serving_matches_per_request_oracle():
+    """MoE archs prefill at exact length (no bucketing: padded tokens
+    would compete for expert capacity) and each request must match the
+    SINGLE-ROW Engine — the batched Engine is not row-independent for
+    MoE because capacity dispatch pools tokens across rows."""
+    from repro.serving.server import _bucketing_safe
+
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    assert not _bucketing_safe(cfg)
+    mparams = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, N = 3, 10, 4
+    prompts = np.asarray(
+        synthetic.ZipfMarkov(cfg.vocab_size).sample(
+            jax.random.PRNGKey(5), B, S
+        )
+    )
+    srv = Server(mparams, cfg, num_slots=2, max_seq_len=S + N)
+    ids = [srv.submit(prompts[b], N, arrival_time=0.5 * b) for b in range(B)]
+    res = srv.run_until_drained()
+    eng = Engine(mparams, cfg, max_seq_len=S + N)
+    for b, rid in enumerate(ids):
+        ref = np.asarray(eng.generate(jnp.asarray(prompts[b : b + 1]), N))
+        assert res[rid] == list(ref[0]), b
+
+
 # -------------------------------------------------------------------------
 # (c) quantized (4-bit float, block 64) trees serve end to end
 # -------------------------------------------------------------------------
