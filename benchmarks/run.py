@@ -20,11 +20,17 @@ def log(*args):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3dt,fig3bs,fig4,table1,appb,kernel,roofline,serve")
+                    help="comma list: fig2,fig3dt,fig3bs,fig4,table1,appb,"
+                         "kernel,roofline,serve,figmix,plan")
+    ap.add_argument("--all", action="store_true",
+                    help="run every suite (the default when --only is unset; "
+                         "spelled out for scripts/CI)")
     args = ap.parse_args()
+    if args.all and args.only:
+        ap.error("--all and --only are mutually exclusive")
     from benchmarks import (appb_centering, fig2_bitlevel, fig3_blocksize,
-                            fig3_datatypes, fig4_proxy, kernel_bench,
-                            roofline, serve_bench, table1_gptq)
+                            fig3_datatypes, fig4_proxy, fig_mixed_frontier,
+                            kernel_bench, roofline, serve_bench, table1_gptq)
 
     suites = {
         "fig2": fig2_bitlevel.run,
@@ -36,8 +42,16 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
         "serve": serve_bench.run,
+        "figmix": fig_mixed_frontier.run,
+        "plan": fig_mixed_frontier.run_plan,
     }
-    wanted = args.only.split(",") if args.only else list(suites)
+    wanted = ([n for n in args.only.split(",") if n] if args.only
+              else list(suites))
+    unknown = sorted(set(wanted) - set(suites))
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; valid: {sorted(suites)}")
+    if not wanted:
+        ap.error("--only names no suites")
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()

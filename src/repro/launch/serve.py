@@ -1,5 +1,6 @@
 """Serving launcher: load a checkpoint, quantize per the paper's
-recommendation (4-bit float, block 64 — §7), and serve requests.
+recommendation (4-bit float, block 64 — §7) or a mixed-precision
+``--plan plan.json`` (precision/), and serve requests.
 
 Two modes:
 
@@ -31,7 +32,8 @@ from repro.configs import QuantConfig
 from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
-from repro.models.quantize import bits_report, quantize_params
+from repro.models.quantize import bits_report, quantize_params, quantize_tree
+from repro.precision import PrecisionPlan
 from repro.serving import Engine, Server, perplexity
 from repro.train import step as step_mod
 
@@ -53,11 +55,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--ckpt-dir", default=None, help="default: random init")
-    ap.add_argument("--bits", type=int, default=4)
-    ap.add_argument("--dtype", default="float",
-                    choices=["int", "float", "dynamic", "quantile", "fp16"])
-    ap.add_argument("--block-size", type=int, default=64)
-    ap.add_argument("--outlier-pct", type=float, default=0.0)
+    # quantization flags default to None so --plan can reject explicit
+    # conflicts loudly instead of silently ignoring them
+    ap.add_argument("--bits", type=int, default=None, help="default: 4")
+    ap.add_argument("--dtype", default=None,
+                    choices=["int", "float", "dynamic", "quantile", "fp16"],
+                    help="default: float")
+    ap.add_argument("--block-size", type=int, default=None, help="default: 64")
+    ap.add_argument("--outlier-pct", type=float, default=None,
+                    help="default: 0")
+    ap.add_argument("--plan", default=None, metavar="PATH.json",
+                    help="mixed-precision PrecisionPlan (precision/plan.py; "
+                         "build with benchmarks/fig_mixed_frontier.py or "
+                         "repro.precision.build_plan). The plan carries the "
+                         "full per-matrix quantization config — mutually "
+                         "exclusive with --bits/--dtype/--block-size/"
+                         "--outlier-pct.")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16],
                     help="KV-cache precision: 16 = bf16 cache, 8/4 = "
                          "blockwise-quantized packed cache")
@@ -91,10 +104,28 @@ def main():
     else:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
 
-    if args.dtype != "fp16":
-        qcfg = QuantConfig(bits=args.bits, dtype=args.dtype,
-                           block_size=args.block_size,
-                           outlier_pct=args.outlier_pct)
+    if args.plan is not None:
+        conflicts = [f for f in ("bits", "dtype", "block_size", "outlier_pct")
+                     if getattr(args, f) is not None]
+        if conflicts:
+            raise SystemExit(
+                f"--plan carries the quantization config; drop "
+                f"--{'/--'.join(c.replace('_', '-') for c in conflicts)} "
+                "(per-matrix settings live in the plan JSON)"
+            )
+        plan = PrecisionPlan.load(args.plan)
+        params = quantize_tree(params, cfg, plan=plan)
+        rep = bits_report(params)
+        print(f"quantized per plan {args.plan} ({plan.describe()}): "
+              f"{rep['avg_bits_per_param']:.2f} bits/param, "
+              f"{rep['total_bits_ideal']/8e9:.3f} GB ideal")
+    elif args.dtype != "fp16":
+        qcfg = QuantConfig(bits=args.bits if args.bits is not None else 4,
+                           dtype=args.dtype if args.dtype is not None else "float",
+                           block_size=args.block_size
+                           if args.block_size is not None else 64,
+                           outlier_pct=args.outlier_pct
+                           if args.outlier_pct is not None else 0.0)
         params = quantize_params(params, qcfg, cfg)
         rep = bits_report(params)
         print(f"quantized {qcfg.describe()}: "

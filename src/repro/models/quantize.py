@@ -18,6 +18,18 @@ model-wide outlier set J_residual from the mean producer std across layers
 (emergent outliers are global across layers — Dettmers et al. 2022a); this
 adaptation is documented in docs/quantization.md#proxy-quantization-
 coreproxypy-modelsquantizepy.
+
+Mixed precision: ``quantize_tree(params, cfg, qcfg=..., plan=...)`` is
+the general entry point.  Every quantizable unit (one stored parameter
+matrix, possibly scan-stacked over layers) has a stable slash-joined
+name ("stack/0/mixer/wq", "stack/0/ffn/w_down", "lm_head", ...); a
+``PrecisionPlan`` (precision/plan.py) maps unit names to per-matrix
+QuantConfig overrides (bits/dtype/block_size/centering), with bits>=16
+meaning "leave this matrix in 16-bit".  ``quantize_params`` is the
+uniform special case.  Granularity note: scan-stacked weights share one
+static bit-width across the layers stacked into a single leaf, so the
+planning unit is (period position, module), not the individual layer —
+docs/quantization.md#mixed-precision-plans-precision.
 """
 
 from __future__ import annotations
@@ -106,17 +118,40 @@ def _module_outliers(name: str, module: dict, container: dict, cfg, qcfg, j_res)
     return None
 
 
-def quantize_params(params, qcfg: QuantConfig, cfg):
-    """Params tree -> same tree with weight matrices as QuantizedTensors."""
-    j_res = residual_outliers(params, cfg, qcfg.outlier_pct)
+def quantize_unit(kind: str, w, qcfg: QuantConfig, outlier_idx=None):
+    """Quantize ONE unit's weight the way the tree walk stores it.
 
-    def walk(tree):
+    kind "matrix"/"moe": [..., In, Out] -> transposed QT, blocks along In.
+    kind "lm_head"/"embed": [V, D] is already (out, in) kernel layout.
+    The profiler (precision/profile.py) calls this too, so sensitivity
+    scores are measured on exactly the storage layout that serves.
+    """
+    if kind in ("matrix", "moe"):
+        return _quantize_matrix(w, qcfg, outlier_idx=outlier_idx)
+    return to_structured(quantize_tensor(
+        w, bits=qcfg.bits, dtype=qcfg.dtype,
+        block_size=qcfg.block_size, batch_dims=0,
+        centering=qcfg.centering, exponent_bits=qcfg.exponent_bits,
+        outlier_idx=outlier_idx, outlier_axis=-1,
+    ))
+
+
+def _walk_units(params, cfg, base: QuantConfig, visit):
+    """Recurse `params`, calling ``visit(name, kind, w, tree)`` on every
+    quantizable unit; `visit` returns the replacement weight (or the
+    original to leave it dense).  `name` is the stable slash-joined tree
+    path, `kind` in {"matrix", "moe", "lm_head", "embed"}.  The `base`
+    config only gates WHICH units are visited (lm_head/embed switches);
+    per-unit bit-widths are the visitor's business."""
+
+    def walk(tree, path):
         if isinstance(tree, (list, tuple)):
-            return type(tree)(walk(v) for v in tree)
+            return type(tree)(walk(v, path + (str(i),)) for i, v in enumerate(tree))
         if not isinstance(tree, dict):
             return tree
         out = {}
         for name, val in tree.items():
+            unit = "/".join(path + (name,))
             # dense module {"w": matrix, ("b": bias)}
             if (
                 isinstance(val, dict)
@@ -124,42 +159,114 @@ def quantize_params(params, qcfg: QuantConfig, cfg):
                 and hasattr(val["w"], "ndim")
                 and val["w"].ndim >= 2
             ):
-                oidx = _module_outliers(name, val, tree, cfg, qcfg, j_res)
                 q = dict(val)
-                q["w"] = _quantize_matrix(val["w"], qcfg, outlier_idx=oidx)
+                q["w"] = visit(unit, "matrix", val["w"], tree)
                 out[name] = q
             # MoE expert stacks: raw arrays [n_p, E, In, Out]
             elif name in ("w_gate", "w_up", "w_down") and hasattr(val, "ndim") and val.ndim == 4:
-                oidx = None
-                if qcfg.outlier_pct > 0:
-                    if name == "w_down" and "w_up" in tree:
-                        std = _producer_std(tree["w_up"])
-                        oidx = outlier_indices_topk(
-                            std, _n_outliers(val.shape[-2], qcfg.outlier_pct)
-                        )
-                    elif j_res is not None and val.shape[-2] == cfg.d_model:
-                        oidx = _bc(j_res, val.shape[:2])
-                out[name] = _quantize_matrix(val, qcfg, outlier_idx=oidx)
-            elif name == "lm_head" and qcfg.quantize_lm_head and hasattr(val, "ndim"):
-                # stored [V, D] == (out, in): already kernel layout
-                oidx = j_res[None] if j_res is not None else None
-                out[name] = to_structured(quantize_tensor(
-                    val, bits=qcfg.bits, dtype=qcfg.dtype,
-                    block_size=qcfg.block_size, batch_dims=0,
-                    centering=qcfg.centering, exponent_bits=qcfg.exponent_bits,
-                    outlier_idx=oidx, outlier_axis=-1,
-                ))
-            elif name == "embed" and qcfg.quantize_embedding and hasattr(val, "ndim"):
-                out[name] = to_structured(quantize_tensor(
-                    val, bits=qcfg.bits, dtype=qcfg.dtype,
-                    block_size=qcfg.block_size, batch_dims=0,
-                    centering=qcfg.centering, exponent_bits=qcfg.exponent_bits,
-                ))
+                out[name] = visit(unit, "moe", val, tree)
+            elif name == "lm_head" and base.quantize_lm_head and hasattr(val, "ndim"):
+                out[name] = visit(unit, "lm_head", val, tree)
+            elif name == "embed" and base.quantize_embedding and hasattr(val, "ndim"):
+                out[name] = visit(unit, "embed", val, tree)
             else:
-                out[name] = walk(val)
+                out[name] = walk(val, path + (name,))
         return out
 
-    return walk(params)
+    return walk(params, ())
+
+
+def _unit_outliers(kind, name, w, container, cfg, qcfg, j_res):
+    """Proxy-quantization outlier indices for one unit (or None)."""
+    if qcfg.outlier_pct <= 0:
+        return None
+    module = name.rsplit("/", 1)[-1]
+    if kind == "matrix":
+        return _module_outliers(module, {"w": w}, container, cfg, qcfg, j_res)
+    if kind == "moe":
+        if module == "w_down" and "w_up" in container:
+            std = _producer_std(container["w_up"])
+            return outlier_indices_topk(
+                std, _n_outliers(w.shape[-2], qcfg.outlier_pct)
+            )
+        if j_res is not None and w.shape[-2] == cfg.d_model:
+            return _bc(j_res, w.shape[:2])
+        return None
+    if kind == "lm_head":
+        return j_res[None] if j_res is not None else None
+    return None  # embed: input dim is the vocab, no residual outliers
+
+
+def quantize_tree(params, cfg, *, qcfg: QuantConfig | None = None, plan=None):
+    """Params tree -> same tree with weight matrices as QuantizedTensors.
+
+    `qcfg` quantizes every unit uniformly; a `plan` (precision/plan.py)
+    overrides bits/dtype/block_size/centering per unit name, with
+    bits >= 16 leaving that matrix dense.  Residual-stream outlier sets
+    (proxy quantization) are computed once from the BASE config's
+    outlier_pct and shared by all units, exactly as in the uniform path.
+    """
+    if plan is None and qcfg is None:
+        raise ValueError("quantize_tree needs qcfg and/or plan")
+    base = qcfg if qcfg is not None else plan.default_config()
+    if plan is not None and plan.arch and plan.arch != cfg.name:
+        raise ValueError(
+            f"plan was built for arch {plan.arch!r}, not {cfg.name!r} "
+            "(rebuild with precision.build_plan, or clear plan.arch)"
+        )
+    j_res = residual_outliers(params, cfg, base.outlier_pct)
+    visited: set = set()
+
+    def visit(name, kind, w, container):
+        visited.add(name)
+        ucfg = base if plan is None else plan.config_for(name, base)
+        if ucfg.bits >= 16:
+            return w  # plan keeps this matrix dense 16-bit
+        oidx = _unit_outliers(kind, name, w, container, cfg, ucfg, j_res)
+        return quantize_unit(kind, w, ucfg, outlier_idx=oidx)
+
+    out = _walk_units(params, cfg, base, visit)
+    if plan is not None:
+        unknown = sorted(set(plan.assignments) - visited)
+        if unknown:
+            raise ValueError(
+                f"plan assigns units not present in this tree: {unknown} "
+                f"(known units: {sorted(visited)}); a typo'd or stale plan "
+                "would otherwise silently fall back to the default bits"
+            )
+    return out
+
+
+def quantize_params(params, qcfg: QuantConfig, cfg):
+    """Uniform quantization of a params tree (the paper's setting)."""
+    return quantize_tree(params, cfg, qcfg=qcfg)
+
+
+def quantizable_units(params, cfg, qcfg: QuantConfig | None = None) -> dict:
+    """Enumerate the tree's quantizable units WITHOUT quantizing:
+    {name: {"kind", "w", "n_params", "shape", "outlier_idx"}} — the
+    planning universe of precision/profile.py, guaranteed to agree with
+    quantize_tree because both run the same walk.  "outlier_idx" is the
+    proxy-quantization index set the quantizer would use under `qcfg`
+    (None when outlier_pct == 0), so sensitivity profiling measures the
+    exact storage layout that serves."""
+    base = qcfg if qcfg is not None else QuantConfig()
+    j_res = residual_outliers(params, cfg, base.outlier_pct)
+    units: dict = {}
+
+    def visit(name, kind, w, container):
+        units[name] = {
+            "kind": kind,
+            "w": w,
+            "n_params": int(w.size),
+            "shape": tuple(w.shape),
+            "outlier_idx": _unit_outliers(kind, name, w, container, cfg,
+                                          base, j_res),
+        }
+        return w
+
+    _walk_units(params, cfg, base, visit)
+    return units
 
 
 def bits_report(qparams) -> dict:

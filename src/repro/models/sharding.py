@@ -278,6 +278,16 @@ class Sharder:
 
             return local_decode_attn
 
+        if self.cfg.kv_bits < 16:
+            # fail at setup with an actionable message, not deep inside
+            # the traced shard_map body on the first decode step
+            raise ValueError(
+                f"kv_bits={self.cfg.kv_bits} is incompatible with "
+                "sequence-sharded decode (bf16 caches only). Drop "
+                "with_kv_quant()/--kv-bits or serve single-device "
+                "(serving/server.py)."
+            )
+
         b_ax, s_ax = self.decode_plan(batch)
         s_size = self._axis_size(s_ax)
         mesh = self.mesh

@@ -1,0 +1,38 @@
+"""Mixed-precision planning: per-matrix sensitivity profiling and bit
+allocation under a total-bits budget (paper's open lever beyond uniform
+4-bit — see docs/quantization.md#mixed-precision-plans-precision).
+
+    from repro.precision import build_plan, PrecisionPlan
+    plan = build_plan(params, cfg, equal_avg_bits=4,
+                      probe_toks=probe_tokens(cfg))
+    qparams = quantize_tree(params, cfg, plan=plan)   # models/quantize.py
+    plan.save("plan.json")                            # --plan for serving
+"""
+
+from repro.precision.allocate import (
+    allocation_cost,
+    allocation_degradation,
+    greedy_allocate,
+    lagrangian_allocate,
+    uniform_cost,
+)
+from repro.precision.metrics import probe_tokens, teacher_forced_kl
+from repro.precision.plan import CANDIDATE_BITS, PrecisionPlan, uniform_plan
+from repro.precision.planner import build_plan
+from repro.precision.profile import UnitProfile, profile_units
+
+__all__ = [
+    "CANDIDATE_BITS",
+    "PrecisionPlan",
+    "UnitProfile",
+    "allocation_cost",
+    "allocation_degradation",
+    "build_plan",
+    "greedy_allocate",
+    "lagrangian_allocate",
+    "probe_tokens",
+    "profile_units",
+    "teacher_forced_kl",
+    "uniform_cost",
+    "uniform_plan",
+]

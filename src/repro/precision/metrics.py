@@ -1,0 +1,60 @@
+"""Degradation metrics for precision planning.
+
+The planner's probe metric is teacher-forced logit KL vs the 16-bit
+model on synthetic batches: deterministic (no free-running token
+matching, which flips on near-ties), cheap (one forward per candidate),
+and the paper's preferred quality axis up to a monotone transform
+(perplexity and KL are both expectations over next-token distributions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import ZipfMarkov
+from repro.models import lm
+
+
+def probe_tokens(cfg, *, n_seqs: int = 4, seq_len: int = 64, seed: int = 7):
+    """Synthetic Zipf-Markov probe batch (the corpus the tiny family is
+    trained on; for random-init registry archs it is simply a stream
+    with realistic marginals)."""
+    return ZipfMarkov(cfg.vocab_size).sample(
+        jax.random.PRNGKey(seed), n_seqs, seq_len
+    )
+
+
+def _forward_logits(params, toks, cfg):
+    h, _, _ = lm.backbone_seq(params, toks, cfg)
+    return lm.logits_from_hidden(params, h, cfg).astype(jnp.float32)
+
+
+_KL_CACHE: dict = {}
+
+
+def _kl_fn(cfg):
+    if cfg not in _KL_CACHE:
+
+        @jax.jit
+        def kl(params_ref, params_q, toks):
+            lr = _forward_logits(params_ref, toks, cfg)
+            lq = _forward_logits(params_q, toks, cfg)
+            pr = jax.nn.softmax(lr, axis=-1)
+            return jnp.mean(
+                jnp.sum(pr * (jax.nn.log_softmax(lr, -1)
+                              - jax.nn.log_softmax(lq, -1)), axis=-1)
+            )
+
+        _KL_CACHE[cfg] = kl
+    return _KL_CACHE[cfg]
+
+
+def teacher_forced_kl(params_ref, params_q, cfg, toks) -> float:
+    """Mean KL(p_ref || p_q) over every position of `toks` [B, S].
+
+    Jitted per (cfg, pytree structure): sweeping many candidate plans
+    with the SAME assignment structure reuses the compiled evaluator,
+    but note each distinct mix of quantized/dense leaves recompiles.
+    """
+    return float(_kl_fn(cfg)(params_ref, params_q, jnp.asarray(toks)))

@@ -6,7 +6,9 @@ sequence-shardable KV caches once, then runs jit-compiled single-token
 decode steps with greedy or temperature sampling and per-sequence EOS
 masking.  Weights may be a quantized tree (models/quantize.py) — the
 engine is agnostic; quantization shows up only as smaller param leaves
-and the in-layer dequant.
+and the in-layer dequant.  Passing ``plan=`` (a precision/plan.py
+PrecisionPlan) quantizes a RAW tree at construction — the mixed-
+precision serving entry point.
 
 This is the STATIC path: one shared scalar position, batching by prompt
 length, the whole batch retires together.  It doubles as the numerical
@@ -85,9 +87,31 @@ def sample_token(logits, key, temperature):
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 
+def check_sharded_kv_quant(cfg, sharder) -> None:
+    """Fail fast at engine setup: sequence-sharded decode serves bf16
+    caches only, so a k-bit KV cache + a sharding mesh is a config error.
+    Raising here (instead of the deep NotImplementedError inside the
+    shard_map decode at models/sharding.py) gives an actionable message
+    before any compilation happens."""
+    if cfg.kv_bits >= 16 or sharder is None:
+        return
+    if getattr(sharder, "mesh", None) is not None and not sharder.replicate:
+        raise ValueError(
+            f"kv_bits={cfg.kv_bits} is incompatible with sequence-sharded "
+            "decode (the mesh path serves bf16 KV caches). Either drop "
+            "with_kv_quant()/--kv-bits, or serve single-device "
+            "(serving/server.py, the continuous-batching path)."
+        )
+
+
 class Engine:
     def __init__(self, params, cfg, *, max_seq_len: int, sharder=None,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, plan=None):
+        check_sharded_kv_quant(cfg, sharder)
+        if plan is not None:
+            from repro.models.quantize import quantize_tree
+
+            params = quantize_tree(params, cfg, plan=plan)
         self.params = params
         self.cfg = cfg
         self.max_seq_len = max_seq_len

@@ -74,7 +74,11 @@ class Server:
 
     def __init__(self, params, cfg, *, num_slots: int, max_seq_len: int,
                  eos_id: int | None = None, seed: int = 0,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, plan=None):
+        if plan is not None:
+            from repro.models.quantize import quantize_tree
+
+            params = quantize_tree(params, cfg, plan=plan)
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id

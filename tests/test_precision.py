@@ -1,0 +1,333 @@
+"""Mixed-precision planner (precision/): unit enumeration, allocators,
+plan JSON round-trip bit-exactness, plan-quantized serving parity, and
+the early sharded-decode x kv-quant rejection."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import QuantConfig
+from repro.configs.registry import get_arch
+from repro.core.qtensor import QuantizedTensor
+from repro.models import lm
+from repro.models.quantize import (
+    bits_report,
+    quantizable_units,
+    quantize_params,
+    quantize_tree,
+)
+from repro.precision import (
+    PrecisionPlan,
+    build_plan,
+    greedy_allocate,
+    lagrangian_allocate,
+    allocation_cost,
+    allocation_degradation,
+    probe_tokens,
+    profile_units,
+    teacher_forced_kl,
+    uniform_cost,
+)
+
+BASE = QuantConfig(bits=4, dtype="float", block_size=64)
+
+
+@pytest.fixture(scope="module")
+def danube():
+    cfg = get_arch("h2o-danube-3-4b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def profiles(danube):
+    cfg, params = danube
+    return profile_units(params, cfg, base=BASE)
+
+
+# -------------------------------------------------------------------------
+# unit enumeration agrees with the quantizer
+# -------------------------------------------------------------------------
+
+def test_units_cover_exactly_the_quantized_leaves(danube):
+    cfg, params = danube
+    units = quantizable_units(params, cfg, BASE)
+    assert all("/" not in u or u.startswith("stack/") for u in units)
+    qp = quantize_params(params, BASE, cfg)
+    n_quantized = bits_report(qp)["quantized_params"]
+    assert sum(u["n_params"] for u in units.values()) == n_quantized
+
+
+def test_moe_and_ssm_units_enumerate():
+    for arch, expect in [("phi3.5-moe-42b-a6.6b", "ffn/w_up"),
+                         ("mamba2-130m", "mixer/in_proj")]:
+        cfg = get_arch(arch).reduced()
+        params = lm.init_params(jax.random.PRNGKey(1), cfg)
+        units = quantizable_units(params, cfg, BASE)
+        assert any(u.endswith(expect) for u in units), (arch, sorted(units))
+
+
+# -------------------------------------------------------------------------
+# quantize_tree plan path
+# -------------------------------------------------------------------------
+
+def test_plan_overrides_per_unit_bits(danube):
+    cfg, params = danube
+    units = sorted(quantizable_units(params, cfg, BASE))
+    lo, hi = units[0], units[-1]
+    plan = PrecisionPlan(
+        arch=cfg.name,
+        default=dataclasses.asdict(BASE),
+        assignments={lo: {"bits": 3}, hi: {"bits": 8, "block_size": 32}},
+    )
+    qp = quantize_tree(params, cfg, plan=plan)
+    seen = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+    ):
+        if isinstance(leaf, QuantizedTensor):
+            seen[jax.tree_util.keystr(path)] = leaf
+    def find(unit):
+        hits = [v for k, v in seen.items()
+                if all(part in k for part in unit.split("/"))]
+        assert hits, (unit, list(seen))
+        return hits[0]
+    assert find(lo).bits == 3
+    qt_hi = find(hi)
+    assert qt_hi.bits == 8 and qt_hi.block_size == 32
+    others = [v for v in seen.values() if v.bits == 4]
+    assert others  # everything un-assigned stays at the default
+
+
+def test_plan_bits16_keeps_matrix_dense(danube):
+    cfg, params = danube
+    units = sorted(quantizable_units(params, cfg, BASE))
+    plan = PrecisionPlan(arch=cfg.name, default=dataclasses.asdict(BASE),
+                         assignments={units[0]: {"bits": 16}})
+    qp = quantize_tree(params, cfg, plan=plan)
+    n_qt_full = sum(
+        isinstance(l, QuantizedTensor) for l in jax.tree_util.tree_leaves(
+            quantize_params(params, BASE, cfg),
+            is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    )
+    n_qt_plan = sum(
+        isinstance(l, QuantizedTensor) for l in jax.tree_util.tree_leaves(
+            qp, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    )
+    assert n_qt_plan == n_qt_full - 1
+
+
+def test_plan_unknown_unit_rejected(danube):
+    """A typo'd or stale plan must fail loudly, not silently fall back
+    to the default bits for the misnamed matrix."""
+    cfg, params = danube
+    plan = PrecisionPlan(arch=cfg.name, default=dataclasses.asdict(BASE),
+                         assignments={"stack/0/mixer/q_typo": {"bits": 8}})
+    with pytest.raises(ValueError, match="q_typo"):
+        quantize_tree(params, cfg, plan=plan)
+
+
+def test_profiler_measures_outlier_layout(danube):
+    """With outlier_pct > 0 the profiled qerr must reflect the dense-
+    kept outlier columns (lower error than the no-outlier layout)."""
+    cfg, params = danube
+    base_ol = dataclasses.replace(BASE, outlier_pct=0.05)
+    units = quantizable_units(params, cfg, base_ol)
+    assert any(u["outlier_idx"] is not None for u in units.values())
+    prof_plain = profile_units(params, cfg, base=BASE, candidates=(3,))
+    prof_ol = profile_units(params, cfg, base=base_ol, candidates=(3,))
+    better = sum(prof_ol[u].qerr[3] < prof_plain[u].qerr[3] - 1e-4
+                 for u in prof_plain)
+    assert better >= len(prof_plain) // 2
+
+
+def test_plan_arch_mismatch_rejected(danube):
+    cfg, params = danube
+    plan = PrecisionPlan(arch="some-other-arch", default=dataclasses.asdict(BASE))
+    with pytest.raises(ValueError, match="arch"):
+        quantize_tree(params, cfg, plan=plan)
+
+
+def test_probe_bits_outside_candidates(danube):
+    """Narrowing `candidates` below the probe width must still measure
+    qerr at probe_bits for calibration (regression: KeyError)."""
+    cfg, params = danube
+    toks = probe_tokens(cfg, n_seqs=1, seq_len=24)
+    profs = profile_units(params, cfg, base=BASE, candidates=(3,),
+                          probe_toks=toks, probe_bits=4)
+    assert all(4 in p.qerr and p.probe_coef is not None
+               for p in profs.values())
+
+
+def test_describe_partial_plan_counts_default_bits():
+    from repro.precision import uniform_plan
+
+    partial = PrecisionPlan(arch="x", default=dataclasses.asdict(BASE),
+                            assignments={"u": {"bits": 8}})
+    assert partial.describe().startswith("mixed[4,8]")
+    full = uniform_plan("x", 8, default=BASE, units=["u", "v"])
+    assert full.describe().startswith("uniform k=8")
+
+
+def test_plan_schema_validation():
+    with pytest.raises(ValueError, match="bits"):
+        PrecisionPlan(arch="x", assignments={"u": {"dtype": "int"}})
+    with pytest.raises(ValueError, match="non-overridable"):
+        PrecisionPlan(arch="x", assignments={"u": {"bits": 4, "outlier_pct": 0.1}})
+    with pytest.raises(ValueError, match="version"):
+        PrecisionPlan(arch="x", version=999)
+
+
+# -------------------------------------------------------------------------
+# JSON round-trip: save -> load -> quantize is bit-exact
+# -------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_bit_exact(danube, tmp_path):
+    cfg, params = danube
+    plan = build_plan(params, cfg, base=BASE, equal_avg_bits=4)
+    path = plan.save(tmp_path / "plan.json")
+    reloaded = PrecisionPlan.load(path)
+    assert reloaded.assignments == plan.assignments
+    assert reloaded.default == plan.default
+
+    qa = quantize_tree(params, cfg, plan=plan)
+    qb = quantize_tree(params, cfg, plan=reloaded)
+    la = jax.tree_util.tree_leaves_with_path(qa)
+    lb = jax.tree_util.tree_leaves_with_path(qb)
+    assert jax.tree_util.tree_structure(qa) == jax.tree_util.tree_structure(qb)
+    for (pa, a), (pb, b) in zip(la, lb):
+        assert pa == pb
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(np.asarray(a), np.asarray(b)), pa
+
+
+# -------------------------------------------------------------------------
+# allocators
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", [greedy_allocate, lagrangian_allocate])
+def test_allocator_respects_budget(profiles, solver):
+    for anchor in (3, 4, 5):
+        budget = uniform_cost(profiles, anchor, BASE)
+        alloc = solver(profiles, budget, base=BASE)
+        assert allocation_cost(profiles, alloc, BASE) <= budget + 1e-6
+        assert set(alloc) == set(profiles)
+
+
+def test_more_budget_never_predicts_worse(profiles):
+    degr = []
+    for anchor in (3, 4, 5, 6, 8):
+        budget = uniform_cost(profiles, anchor, BASE)
+        alloc = greedy_allocate(profiles, budget, base=BASE)
+        degr.append(allocation_degradation(profiles, alloc))
+    assert all(a >= b - 1e-12 for a, b in zip(degr, degr[1:]))
+
+
+def test_allocator_beats_uniform_on_predicted(profiles):
+    budget = uniform_cost(profiles, 4, BASE)
+    uni = {u: 4 for u in profiles}
+    alloc = greedy_allocate(profiles, budget, base=BASE)
+    assert (allocation_degradation(profiles, alloc)
+            <= allocation_degradation(profiles, uni) + 1e-12)
+
+
+def test_infeasible_budget_raises(danube, profiles):
+    cfg, params = danube
+    with pytest.raises(ValueError, match="budget"):
+        build_plan(params, cfg, base=BASE, profiles=profiles, budget_bits=1.0)
+
+
+# -------------------------------------------------------------------------
+# planner gate: measured KL <= uniform at equal budget (probe metric)
+# -------------------------------------------------------------------------
+
+def test_planned_mixed_kl_at_most_uniform(danube):
+    cfg, params = danube
+    toks = probe_tokens(cfg, n_seqs=2, seq_len=48)
+    plan = build_plan(params, cfg, base=BASE, equal_avg_bits=4,
+                      probe_toks=toks)
+    qp = quantize_tree(params, cfg, plan=plan)
+    qp_uni = quantize_params(params, BASE, cfg)
+    kl_mixed = teacher_forced_kl(params, qp, cfg, toks)
+    kl_uni = teacher_forced_kl(params, qp_uni, cfg, toks)
+    assert kl_mixed <= kl_uni + 1e-9
+    rep, rep_u = bits_report(qp), bits_report(qp_uni)
+    assert rep["avg_bits_per_param"] <= rep_u["avg_bits_per_param"] + 1e-9
+
+
+# -------------------------------------------------------------------------
+# serving: Engine == Server token-identically on a plan-quantized tree
+# -------------------------------------------------------------------------
+
+def test_engine_server_identical_with_plan():
+    from repro.data import synthetic
+    from repro.serving import Engine, Server
+
+    cfg = get_arch("tiny-160k")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    units = sorted(quantizable_units(params, cfg, BASE))
+    bits_cycle = [3, 5, 8, 4]
+    plan = PrecisionPlan(
+        arch=cfg.name,
+        default=dataclasses.asdict(BASE),
+        assignments={u: {"bits": bits_cycle[i % 4]}
+                     for i, u in enumerate(units)},
+    )
+    B, S, N = 3, 10, 6
+    prompts = np.asarray(synthetic.ZipfMarkov(cfg.vocab_size).sample(
+        jax.random.PRNGKey(5), B, S))
+    eng = Engine(params, cfg, max_seq_len=S + N, plan=plan)
+    assert any(isinstance(l, QuantizedTensor) for l in jax.tree_util.tree_leaves(
+        eng.params, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+    ref = np.asarray(eng.generate(jnp.asarray(prompts), N))
+    srv = Server(params, cfg, num_slots=2, max_seq_len=S + N, plan=plan)
+    ids = [srv.submit(prompts[b], N, arrival_time=0.3 * b) for b in range(B)]
+    res = srv.run_until_drained()
+    for b, rid in enumerate(ids):
+        assert res[rid] == list(ref[b]), b
+
+
+# -------------------------------------------------------------------------
+# satellite: sharded decode x kv-quant rejected at setup, not deep in
+# the shard_map body (regression for models/sharding.py NotImplemented)
+# -------------------------------------------------------------------------
+
+class _FakeMesh:  # duck-typed like tests/test_distributed.py
+    axis_names = ("data", "model")
+    shape = {"data": 1, "model": 1}
+    size = 1
+
+
+def _fake_sharded_sharder(cfg):
+    from repro.models.sharding import Sharder
+
+    s = Sharder.__new__(Sharder)
+    s.mesh = _FakeMesh()
+    s.cfg = cfg
+    s.tp_size = 1
+    s.replicate = False
+    return s
+
+
+def test_engine_rejects_kv_quant_with_sharded_decode():
+    from repro.serving import Engine
+    from repro.serving.engine import check_sharded_kv_quant
+
+    cfg = get_arch("tiny-160k").with_kv_quant(4)
+    sharder = _fake_sharded_sharder(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="kv_bits"):
+        Engine(params, cfg, max_seq_len=16, sharder=sharder)
+    # bf16 cache or replicated/no-mesh sharders pass the check
+    check_sharded_kv_quant(cfg.with_kv_quant(16), sharder)
+    check_sharded_kv_quant(cfg, None)
+
+
+def test_sharder_decode_attn_fn_rejects_kv_quant():
+    cfg = get_arch("tiny-160k").with_kv_quant(8)
+    sharder = _fake_sharded_sharder(cfg)
+    with pytest.raises(ValueError, match="kv_bits"):
+        sharder.decode_attn_fn(batch=2, cache_len=32)
