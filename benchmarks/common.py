@@ -85,6 +85,23 @@ def timed(fn, *args, repeats=3):
     return (time.perf_counter() - t0) / repeats * 1e6  # us
 
 
+def timed_robust(fn, *args, repeats=30):
+    """Per-call wall times, mean of the fastest half — the right
+    estimator for gated speedup ratios on noisy shared-CPU runners
+    (scheduler preemption only ever ADDS time, so the fast tail is the
+    honest hardware number)."""
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    keep = max(1, repeats // 2)
+    return sum(ts[:keep]) / keep * 1e6  # us
+
+
 def emit(rows):
     """CSV rows: name,us_per_call,derived."""
     for name, us, derived in rows:

@@ -32,7 +32,14 @@ a deterministic criterion, unlike free-running token comparison, which
 can flip on near-ties.  At kv_bits=4 the bench additionally asserts
 the >= 3x KV-byte reduction the paper's bandwidth argument promises.
 
+Weight-matmul dispatch (the fused dequant-GEMM tentpole) is a knob too:
+``--matmul-mode {auto,fused,dequant_einsum}`` serves both paths in the
+given mode and stamps it into every CSV row (``mm=``), so a two-run
+sweep yields the fused-vs-dequant serving column next to the kernel
+microbench gate (benchmarks/kernel_bench.py).
+
     PYTHONPATH=src python benchmarks/serve_bench.py --kv-bits 4
+    PYTHONPATH=src python benchmarks/serve_bench.py --matmul-mode dequant_einsum
 """
 
 from __future__ import annotations
@@ -96,15 +103,20 @@ def _run_continuous(srv, reqs):
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         rate=4.0, max_new_range=(8, 48), quantized=True, seed=0,
-        kv_bits=None):
+        kv_bits=None, matmul_mode="auto"):
     """kv_bits: None sweeps {16, 8, 4}; an int benches that precision
-    (16-bit KV bytes are still measured for the reduction ratio)."""
-    cfg = get_arch(arch)
+    (16-bit KV bytes are still measured for the reduction ratio).
+    matmul_mode picks the QuantizedTensor dispatch for BOTH paths
+    (auto resolves to the fused dequant-GEMM for eligible matrices;
+    dequant_einsum is the 16-bit-transient oracle) and is reported in
+    every row so sweeps across modes are comparable."""
+    cfg = get_arch(arch).with_matmul_mode(matmul_mode)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     if quantized:
         qcfg = QuantConfig(bits=4, dtype="float", block_size=64)
         params = quantize_params(params, qcfg, cfg)
-        log(f"  serving {arch} quantized {qcfg.describe()}")
+        log(f"  serving {arch} quantized {qcfg.describe()} "
+            f"(matmul_mode={matmul_mode})")
 
     reqs = synthetic.serving_workload(
         cfg.vocab_size, n_requests, max_new_range=max_new_range,
@@ -152,7 +164,7 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
             log(f"  static:     {dt_s:.2f}s  {tps_s:8.1f} tok/s "
                 f"(offline-oracle grouping)")
             rows.append(("serve/static", dt_s / total_tokens * 1e6,
-                         f"tok_s={tps_s:.1f}"))
+                         f"tok_s={tps_s:.1f};mm={matmul_mode}"))
             stats.update({"tok_s_static": tps_s, "speedup": speedup})
 
         slots_equal_hbm = int(num_slots * bytes16 / max(kvb["total"], 1))
@@ -183,10 +195,12 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         log(line)
         rows.append((f"serve/continuous_kv{bits}",
                      dt_c / total_tokens * 1e6,
-                     f"tok_s={tps_c:.1f};kv_mb={kvb['total']/1e6:.3f};"
+                     f"tok_s={tps_c:.1f};mm={matmul_mode};"
+                     f"kv_mb={kvb['total']/1e6:.3f};"
                      f"slots_equal_hbm={slots_equal_hbm}"))
         stats[f"tok_s_kv{bits}"] = tps_c
 
+    stats["matmul_mode"] = matmul_mode
     if "speedup" in stats:
         log(f"  speedup: {stats['speedup']:.2f}x "
             f"(outputs token-identical at kv16)")
@@ -202,6 +216,12 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="tiny-160k")
     ap.add_argument("--num-slots", type=int, default=8)
     ap.add_argument("--num-requests", type=int, default=48)
+    ap.add_argument("--matmul-mode", default="auto",
+                    choices=["auto", "fused", "dequant_einsum"],
+                    help="QuantizedTensor matmul dispatch for both the "
+                         "static and continuous paths (reported as the "
+                         "mm= column in every row)")
     args = ap.parse_args()
     run(arch=args.arch, num_slots=args.num_slots,
-        n_requests=args.num_requests, kv_bits=args.kv_bits)
+        n_requests=args.num_requests, kv_bits=args.kv_bits,
+        matmul_mode=args.matmul_mode)

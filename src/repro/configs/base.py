@@ -76,6 +76,19 @@ class ArchConfig:
     kv_dtype: str = "float"          # int | float | dynamic (not quantile)
     kv_use_kernel: bool = False      # Pallas dequant (TPU); False = pure JAX
 
+    # Weight-matmul dispatch for QuantizedTensor weights
+    # (docs/quantization.md#the-fused-dequant-gemm-serving-path):
+    #   "dequant_einsum" — materialize the 16-bit dequant transient, einsum
+    #                      (the original hot path; also the numerical oracle)
+    #   "fused"          — packed codes + per-block scales go straight into
+    #                      the fused dequant-GEMM (Pallas on TPU, the
+    #                      gather-free jnp fused path elsewhere); QTs the
+    #                      kernel layout cannot express (centering means,
+    #                      proxy outliers, flat odd-shape storage) fall back
+    #                      to dequant_einsum per matrix
+    #   "auto"           — resolve per matrix: fused wherever eligible
+    matmul_mode: str = "auto"        # auto | fused | dequant_einsum
+
     # ---- derived ------------------------------------------------------
     @property
     def d_inner(self) -> int:
@@ -170,6 +183,14 @@ class ArchConfig:
             kv_dtype=kv_dtype,
             kv_use_kernel=use_kernel if use_kernel is not None else self.kv_use_kernel,
         )
+
+    def with_matmul_mode(self, mode: str) -> "ArchConfig":
+        """Same arch with a different QuantizedTensor matmul dispatch."""
+        if mode not in ("auto", "fused", "dequant_einsum"):
+            raise ValueError(
+                f"matmul_mode must be auto | fused | dequant_einsum, got {mode!r}"
+            )
+        return dataclasses.replace(self, matmul_mode=mode)
 
     def reduced(self, **overrides) -> "ArchConfig":
         """A smoke-test-sized config of the same family (small dims, same

@@ -38,7 +38,7 @@ from repro.core.codebooks import make_codebook, quantile_codebook
     jax.tree_util.register_dataclass,
     data_fields=["packed", "scales", "means", "codebook", "outlier_vals", "outlier_idx"],
     meta_fields=["quant_shape", "bits", "block_size", "dtype_name", "centering",
-                 "outlier_axis", "transposed", "structured"],
+                 "outlier_axis", "transposed", "structured", "orig_dtype"],
 )
 @dataclasses.dataclass
 class QuantizedTensor:
@@ -55,11 +55,17 @@ class QuantizedTensor:
     centering: bool
     outlier_axis: int = 0
     transposed: bool = False
-    #: structured storage: packed [*B, rows, cols//cpw], scales
-    #: [*B, rows, cols//block] — 2-D layouts that shard row-wise under
+    #: structured storage: packed [*B, rows, words_per_row], scales
+    #: [*B, rows, cols//block] — 2-D layouts that (a) shard row-wise under
     #: GSPMD without the 1-D<->2-D reshapes that force replication
-    #: (EXPERIMENTS.md §Perf iteration 2)
+    #: (EXPERIMENTS.md §Perf iteration 2) and (b) are exactly the fused
+    #: dequant-GEMM kernel operand layout (kernels/qmatmul.py): each row's
+    #: codes are word-aligned, so words_per_row = ceil(cols / cpw) with the
+    #: tail slots of the last word zero for odd bit-widths
     structured: bool = False
+    #: dtype of the tensor handed to quantize_tensor, as a string (meta
+    #: fields must hash); dequantize_params restores it
+    orig_dtype: str = "float32"
 
     # -- convenience ----------------------------------------------------
     @property
@@ -164,25 +170,39 @@ def quantize_tensor(
         centering=centering,
         outlier_axis=outlier_axis,
         transposed=transposed,
+        orig_dtype=str(x.dtype),
     )
 
 
 def to_structured(qt: QuantizedTensor) -> QuantizedTensor:
     """Reshape a 2-D-item QT into row-structured storage (see class doc):
-    packed [*B, rows, cols//cpw], scales [*B, rows, cols//block].  Row-wise
-    GSPMD sharding then works without 1-D<->2-D reshapes (which force
-    involuntary replication — EXPERIMENTS.md §Perf).  Requires cols
-    divisible by both the packing word and the block size."""
+    packed [*B, rows, words_per_row], scales [*B, rows, cols//block].
+    Row-wise GSPMD sharding then works without 1-D<->2-D reshapes (which
+    force involuntary replication — EXPERIMENTS.md §Perf), and the arrays
+    are directly the fused dequant-GEMM kernel operands (kernels/ops.py).
+
+    Requires cols divisible by the block size (blocks must not straddle
+    rows).  When cols also divide the packing word this is a pure
+    reshape; otherwise (odd bit-widths: 3-bit cpw=10, 5-bit cpw=6,
+    6-bit cpw=5) the flat packing straddles rows and the codes are
+    REPACKED row-aligned — each row gets ceil(cols/cpw) words with an
+    inert zero tail, the same word-tail convention as core/packing on a
+    single row."""
     if qt.structured or len(qt.quant_shape) != 2:
         return qt
     rows, cols = qt.quant_shape
     cpw = 32 // qt.bits
-    if cols % cpw or cols % qt.block_size:
-        return qt  # flat fallback (e.g. 3-bit cpw=10 on odd dims)
+    if cols % qt.block_size:
+        return qt  # flat fallback: blocks straddle rows
     b = qt.batch_shape
+    if cols % cpw:
+        codes = packing.unpack(qt.packed, qt.bits, rows * cols)
+        packed = packing.pack(codes.reshape(b + (rows, cols)), qt.bits)
+    else:
+        packed = qt.packed.reshape(b + (rows, cols // cpw))
     return dataclasses.replace(
         qt,
-        packed=qt.packed.reshape(b + (rows, cols // cpw)),
+        packed=packed,
         scales=qt.scales.reshape(b + (rows, cols // qt.block_size)),
         means=None if qt.means is None
         else qt.means.reshape(b + (rows, cols // qt.block_size)),

@@ -5,9 +5,13 @@ and the packed KV-cache dequant (`kv_dequant`, serving read path).
 
 from repro.kernels.kv_dequant import KVQuantSpec, kv_spec
 from repro.kernels.ops import (
+    fused_backend,
+    fused_matmul,
     operand_from_qtensor,
     prepare_operand,
     qmatmul,
+    qmatmul_fused_jnp,
+    qt_fused_eligible,
     quantize_blocks,
 )
 from repro.kernels.ref import QMatmulOperand, qmatmul_ref
@@ -15,10 +19,14 @@ from repro.kernels.ref import QMatmulOperand, qmatmul_ref
 __all__ = [
     "KVQuantSpec",
     "QMatmulOperand",
+    "fused_backend",
+    "fused_matmul",
     "kv_spec",
     "operand_from_qtensor",
     "prepare_operand",
     "qmatmul",
+    "qmatmul_fused_jnp",
+    "qt_fused_eligible",
     "qmatmul_ref",
     "quantize_blocks",
 ]

@@ -1,6 +1,28 @@
 """jit'd public wrappers around the Pallas kernels: operand preparation
 (padding/alignment), QuantizedTensor interop, and dispatch between the
-kernel (TPU) and the pure-jnp reference (CPU / dry-run).
+kernel (TPU), the gather-free jnp fused path (CPU serving), and the
+pure-jnp reference oracle (semantics / dry-run).
+
+The fused dequant-GEMM has three execution backends
+(docs/quantization.md#the-fused-dequant-gemm-serving-path):
+
+* ``pallas``  — kernels/qmatmul.py, the real TPU kernel (interpret mode
+  on CPU for parity tests only; interpret is orders of magnitude slower
+  than jnp);
+* ``jnp``     — :func:`qmatmul_fused_jnp`, a jit-friendly path with the
+  kernel's VALUES (arithmetic dequant for ``int`` codebooks, codebook
+  lookup for LUTs — XLA CPU vectorizes small-table gathers fine; the
+  no-gather select tree is a TPU/VPU constraint, and is measurably
+  slower on CPU) that dequantizes directly in ``[K, N]`` layout so the
+  matmul hits XLA CPU's fast GEMM, and fences the dequantized tile with
+  an optimization barrier so XLA cannot re-fuse the dequant chain into
+  the dot (which re-evaluates it per output tile and is what makes the
+  naive dequant+einsum slow);
+* ``oracle``  — kernels/ref.py, the semantic ground truth.
+
+``fused_backend()`` picks per jax backend; the model layer
+(models/layers.linear) routes QuantizedTensor matmuls here when
+``cfg.matmul_mode`` resolves to fused.
 """
 
 from __future__ import annotations
@@ -31,35 +53,125 @@ def prepare_operand(
     block_size: int = 64,
     exponent_bits=None,
 ) -> QMatmulOperand:
-    """Quantize a dense weight [K, N] into kernel layout (blocks along K)."""
+    """Quantize a dense weight [K, N] into kernel layout (blocks along K).
+
+    K need not divide the block size or the packing word: the reduction
+    dim is zero-padded to block alignment (zeros quantize to the exact-0
+    code for the static codebooks, and the matmul wrappers zero-pad the
+    activations to match), and each row's codes pack word-aligned with an
+    inert tail for odd bit-widths."""
     K, N = w.shape
+    # data-dependent (quantile) codebooks must see the REAL weights:
+    # build before padding so artificial zeros don't skew the bins
     cb = make_codebook(dtype, bits, exponent_bits=exponent_bits, tensor=w)
+    Kb = -(-K // block_size) * block_size
+    if Kb != K:
+        w = jnp.pad(w, ((0, Kb - K), (0, 0)))
     q = blockwise.encode(w.T, cb, block_size)  # blocks run along K per column
-    codes = q.codes.reshape(N, K)
-    packed = jax.vmap(lambda c: packing.pack(c, bits))(codes)
-    scales = q.scales.reshape(N, K // block_size)
+    codes = q.codes.reshape(N, Kb)
+    packed = packing.pack(codes, bits)         # word-aligned per row
+    scales = q.scales.reshape(N, Kb // block_size)
     return QMatmulOperand(
         packed=packed, scales=scales, codebook=cb,
-        bits=bits, block_size=block_size, k_dim=K, dtype_name=dtype,
+        bits=bits, block_size=block_size, k_dim=Kb, dtype_name=dtype,
+    )
+
+
+def qt_fused_eligible(qt) -> bool:
+    """Can this QuantizedTensor be viewed as a fused-GEMM operand?
+
+    Requires row-structured 2-D storage with no leading batch dims (a
+    scan has already sliced the layer axis), no centering means and no
+    proxy outlier rows — the kernel streams packed codes + scales only.
+    Ineligible QTs take the dequant-einsum path per matrix."""
+    return (
+        isinstance(qt, QuantizedTensor)
+        and qt.structured
+        and len(qt.quant_shape) == 2
+        and qt.packed.ndim == 2
+        and qt.means is None
+        and qt.outlier_idx is None
     )
 
 
 def operand_from_qtensor(qt: QuantizedTensor) -> QMatmulOperand:
-    """View a transposed-stored 2-D QuantizedTensor as kernel operands.
-    Structured QTs are already in kernel layout; flat ones are reshaped."""
-    assert qt.transposed and len(qt.quant_shape) == 2, "need [N, K] storage"
+    """View a 2-D QuantizedTensor storing [N, K] (transposed weights, or
+    lm_head/embed which are natively (out, in)) as kernel operands.
+    Structured QTs are already in kernel layout — any bit-width, row
+    word tails included; flat ones are reshaped when aligned."""
+    assert len(qt.quant_shape) == 2, "need [N, K] storage"
     N, K = qt.quant_shape
     cpw = 32 // qt.bits
-    assert K % cpw == 0, "K must align to the packing word"
+    if qt.structured:
+        assert qt.packed.ndim == 2, "batched QT: slice the batch dim first"
+        packed, scales = qt.packed, qt.scales
+    else:
+        assert K % cpw == 0, "flat storage must align to the packing word"
+        assert K % qt.block_size == 0, "flat storage must align to blocks"
+        packed = qt.packed.reshape(N, K // cpw)
+        scales = qt.scales.reshape(N, K // qt.block_size)
     return QMatmulOperand(
-        packed=qt.packed.reshape(N, K // cpw),
-        scales=qt.scales.reshape(N, K // qt.block_size),
+        packed=packed,
+        scales=scales,
         codebook=qt.codebook,
         bits=qt.bits,
         block_size=qt.block_size,
         k_dim=K,
         dtype_name=qt.dtype_name,
     )
+
+
+def fused_backend() -> str:
+    """Default fused-GEMM backend for this process: the Pallas kernel on
+    TPU, the gather-free jnp path everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def qmatmul_fused_jnp(x2: jnp.ndarray, op: QMatmulOperand) -> jnp.ndarray:
+    """Fused path without Pallas: x2 [M, k_dim] @ W -> [M, N] in x2.dtype.
+
+    Dequantizes straight into [K, N] layout (one cheap uint32 transpose of
+    the packed words, never a [N, K] float transpose), applies scales via
+    a blocked reshape, fences with an optimization barrier, and runs a
+    single f32 GEMM.  Mirrors kernel semantics: values and scales agree
+    with the oracle bit-for-bit; only f32 accumulation order differs."""
+    K = op.k_dim
+    N = op.packed.shape[0]
+    bits, bs = op.bits, op.block_size
+    cpw = 32 // bits
+    assert K % bs == 0, (K, bs)
+
+    shifts = jnp.arange(cpw, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    p_t = op.packed.T                                   # [W, N] uint32
+    c = ((p_t[:, None, :] >> shifts[None, :, None]) & mask)
+    c = c.reshape(-1, N)[:K]                            # [K, N] codes
+    if op.dtype_name == "int":
+        half = float(2 ** (bits - 1) - 1)
+        vals = jnp.clip(c.astype(jnp.float32) - half, -half, half) / half
+    else:
+        vals = jnp.take(op.codebook.astype(jnp.float32),
+                        c.astype(jnp.int32), axis=0)
+    s_t = op.scales.astype(jnp.float32).T               # [K // bs, N]
+    wt = (vals.reshape(K // bs, bs, N) * s_t[:, None, :]).reshape(K, N)
+    # round the weight tile to the activation dtype — exactly the
+    # transient dequantize_tensor(out_dtype=x.dtype) produces — so the
+    # fused and dequant_einsum paths multiply IDENTICAL weight values
+    # and greedy decode stays token-stable across modes (a no-op for
+    # f32 activations; the golden tests in test_decode_consistency.py
+    # pin this).  The barrier sits BETWEEN the down- and up-cast:
+    # placed after, XLA folds convert(f32->bf16->f32) to identity and
+    # the rounding silently disappears.
+    wt = jax.lax.optimization_barrier(wt.astype(x2.dtype))
+    wt = wt.astype(jnp.float32)
+    y = x2.astype(jnp.float32) @ wt
+    return y.astype(x2.dtype)
+
+
+def _pad_x_to_k(x2: jnp.ndarray, k_dim: int) -> jnp.ndarray:
+    K = x2.shape[-1]
+    assert K <= k_dim, (K, k_dim)
+    return jnp.pad(x2, ((0, 0), (0, k_dim - K))) if K < k_dim else x2
 
 
 def qmatmul(
@@ -71,14 +183,18 @@ def qmatmul(
     bm: int = 128,
     bn: int = 128,
 ):
-    """y = x @ W, x [..., K] -> [..., N].  Pads M/N/K to tile alignment."""
-    if not use_kernel:
-        lead = x.shape[:-1]
-        y = qmatmul_ref(x.reshape(-1, x.shape[-1]), op)
-        return y.reshape(lead + (y.shape[-1],))
-
+    """y = x @ W via the Pallas kernel, x [..., K<=k_dim] -> [..., N].
+    Pads M/N/K to tile alignment (including odd-bit word tails: the
+    word-aligned row packing makes zero-padding the word axis exactly
+    equivalent to packing zero-padded codes).  use_kernel=False runs the
+    oracle."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    if not use_kernel:
+        y = qmatmul_ref(x2, op)
+        return y.reshape(lead + (y.shape[-1],))
+
+    x2 = _pad_x_to_k(x2, op.k_dim)
     M, K = x2.shape
     N = op.packed.shape[0]
     cpw = 32 // op.bits
@@ -91,8 +207,12 @@ def qmatmul(
     Np = -(-N // bn_eff) * bn_eff
 
     xp = jnp.pad(x2, ((0, Mp - M), (0, Kp - K)))
-    packed = jnp.pad(op.packed, ((0, Np - N), (0, (Kp - K) // cpw)))
-    scales = jnp.pad(op.scales, ((0, Np - N), (0, (Kp - K) // op.block_size)))
+    packed = jnp.pad(
+        op.packed, ((0, Np - N), (0, Kp // cpw - op.packed.shape[1]))
+    )
+    scales = jnp.pad(
+        op.scales, ((0, Np - N), (0, Kp // op.block_size - op.scales.shape[1]))
+    )
 
     y = qk.qmatmul_pallas(
         xp, packed, scales, op.codebook,
@@ -100,6 +220,36 @@ def qmatmul(
         bm=bm_eff, bn=bn_eff, bk=bk, interpret=interpret,
     )
     return y[:M, :N].reshape(lead + (N,))
+
+
+def fused_matmul(
+    x: jnp.ndarray,
+    op: QMatmulOperand,
+    *,
+    backend: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Backend-dispatched fused dequant-GEMM: x [..., K<=k_dim] -> [..., N].
+
+    backend: "pallas" | "jnp" | "oracle" (None -> fused_backend()).
+    interpret only applies to the pallas backend (None -> interpret off
+    TPU, i.e. CPU parity-test mode)."""
+    if backend is None:
+        backend = fused_backend()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return qmatmul(x, op, use_kernel=True, interpret=interpret)
+    x2 = _pad_x_to_k(x2, op.k_dim)
+    if backend == "jnp":
+        y = qmatmul_fused_jnp(x2, op)
+    elif backend == "oracle":
+        y = qmatmul_ref(x2, op)
+    else:
+        raise ValueError(f"unknown fused backend {backend!r}")
+    return y.reshape(lead + (y.shape[-1],))
 
 
 def quantize_blocks(

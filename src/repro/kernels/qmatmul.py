@@ -6,7 +6,7 @@ PACKED k-bit codes (uint32 words) + 16-bit per-block scales into VMEM —
 k/16 of the bf16 traffic — dequantizes tile-by-tile on the VPU, and feeds
 the MXU with bf16/f32 tiles.
 
-Layout (matches models/quantize.py transposed storage; see
+Layout (matches models/quantize.py row-structured storage; see
 docs/quantization.md#packing-layout-corepackingpy):
   x       [M, K]            activations (bf16/f32)
   packed  [N, K//cpw]       uint32, cpw = 32//bits codes per word along K
@@ -17,6 +17,13 @@ docs/quantization.md#packing-layout-corepackingpy):
 Grid (M/bm, N/bn, K/bk), K innermost with an f32 VMEM accumulator.
 bk must be a multiple of lcm(cpw, B) so packed words and scale blocks
 never straddle a tile.
+
+The serving shapes land here through kernels/ops.qmatmul, which
+collapses leading activation dims ([B,1,d] decode, [B,S,d] bucketed
+prefill) and pads M/N/K to tile alignment — including odd 3/5/6-bit
+word tails: rows pack word-aligned (packed_size(K) words per row), so
+zero-padding the word axis is exactly equivalent to packing zero-padded
+codes, and padded scale blocks are zero so the tail cannot contribute.
 
 Dequantization on TPU (docs/quantization.md#kernels-kernels — no gather):
   * `int` data type: pure arithmetic (codes are affine in the value).
@@ -70,6 +77,12 @@ def _qmatmul_kernel(x_ref, w_ref, s_ref, cb_ref, o_ref, acc_ref, *,
     scales = s_ref[...].astype(jnp.float32)             # [bn, bk//B]
     scales = jnp.repeat(scales, block_size, axis=1)     # [bn, bk]
     wt = vals * scales
+    if x_ref.dtype != jnp.float32:
+        # round the weight tile to the activation dtype — the value the
+        # dequant_einsum path multiplies (dequantize_tensor out_dtype=
+        # x.dtype) — so matmul_mode stays a pure perf knob on TPU too
+        # (same contract as ops.qmatmul_fused_jnp; see layers.linear)
+        wt = wt.astype(x_ref.dtype).astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)                  # [bm, bk]
     acc_ref[...] += jax.lax.dot_general(
         x, wt, (((1,), (1,)), ((), ())),

@@ -20,10 +20,16 @@ class QMatmulOperand(NamedTuple):
     """Kernel-layout quantized weight for y = x @ W, W logical [K, N].
 
     Blocks run along the reduction dim K (per output column), matching the
-    transposed QuantizedTensor storage (models/quantize.py).
+    transposed QuantizedTensor storage (models/quantize.py).  Rows are
+    packed word-aligned: for odd bit-widths the last word of each row
+    carries an inert zero tail, so ``packed.shape[1] == ceil(K / cpw)``
+    (== K // cpw exactly when cpw divides K).  ``k_dim`` is the stored
+    (block-aligned) K; activations with fewer columns are zero-padded by
+    the callers — the padded region dequantizes against real codes but
+    multiplies zero activations, so it cannot contribute.
     """
 
-    packed: jnp.ndarray    # uint32 [N, K // cpw]
+    packed: jnp.ndarray    # uint32 [N, ceil(K / cpw)]
     scales: jnp.ndarray    # bf16   [N, K // block]
     codebook: jnp.ndarray  # f32    [2**bits]
     bits: int
@@ -34,7 +40,6 @@ class QMatmulOperand(NamedTuple):
 
 def dequantize_operand(op: QMatmulOperand, out_dtype=jnp.float32) -> jnp.ndarray:
     """Full dequantized W^T [N, K]."""
-    N = op.packed.shape[0]
     codes = packing.unpack(op.packed, op.bits, op.k_dim)  # [N, K]
     vals = jnp.take(op.codebook, codes.astype(jnp.int32), axis=0)
     scales = jnp.repeat(
@@ -44,8 +49,15 @@ def dequantize_operand(op: QMatmulOperand, out_dtype=jnp.float32) -> jnp.ndarray
 
 
 def qmatmul_ref(x: jnp.ndarray, op: QMatmulOperand) -> jnp.ndarray:
-    """y = x @ W with on-the-fly dequantization; x [M, K] -> [M, N]."""
-    wt = dequantize_operand(op, out_dtype=jnp.float32)
+    """y = x @ W with on-the-fly dequantization; x [M, K<=k_dim] -> [M, N].
+
+    A narrower x contracts against the leading x.shape[-1] stored columns
+    (identical to zero-padding x to k_dim: for operands built by
+    prepare_operand the tail columns are encodings of the K-alignment
+    zero padding).  Anything wider than the storage is a caller bug."""
+    K = x.shape[-1]
+    assert K <= op.k_dim, (K, op.k_dim)
+    wt = dequantize_operand(op, out_dtype=jnp.float32)[:, :K]
     return jnp.einsum(
         "mk,nk->mn", x.astype(jnp.float32), wt
     ).astype(x.dtype)

@@ -71,6 +71,14 @@ def main():
                          "full per-matrix quantization config — mutually "
                          "exclusive with --bits/--dtype/--block-size/"
                          "--outlier-pct.")
+    ap.add_argument("--matmul-mode", default="auto",
+                    choices=["auto", "fused", "dequant_einsum"],
+                    help="QuantizedTensor matmul dispatch: fused streams "
+                         "packed codes + scales into the dequant-GEMM "
+                         "(Pallas on TPU, gather-free jnp on CPU); "
+                         "dequant_einsum is the 16-bit-transient oracle "
+                         "path; auto resolves per matrix "
+                         "(docs/quantization.md)")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16],
                     help="KV-cache precision: 16 = bf16 cache, 8/4 = "
                          "blockwise-quantized packed cache")
@@ -94,7 +102,9 @@ def main():
                     help="print tokens of the first request as they land")
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch)
+    cfg = get_arch(args.arch).with_matmul_mode(args.matmul_mode)
+    if args.matmul_mode != "auto":
+        print(f"matmul mode: {args.matmul_mode}")
     if args.kv_bits < 16:
         cfg = cfg.with_kv_quant(args.kv_bits, block_size=args.kv_block_size,
                                 dtype=args.kv_dtype)

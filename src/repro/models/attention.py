@@ -75,9 +75,10 @@ def project_qkv(params, x, cfg, positions):
     """x [B,S,D] -> q [B,S,H,Dh], k,v [B,S,K,Dh] with RoPE applied."""
     B, S, _ = x.shape
     H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = dense(params["wq"], x).reshape(B, S, H, Dh)
-    k = dense(params["wk"], x).reshape(B, S, K, Dh)
-    v = dense(params["wv"], x).reshape(B, S, K, Dh)
+    mm = cfg.matmul_mode
+    q = dense(params["wq"], x, mode=mm).reshape(B, S, H, Dh)
+    k = dense(params["wk"], x, mode=mm).reshape(B, S, K, Dh)
+    v = dense(params["wv"], x, mode=mm).reshape(B, S, K, Dh)
     if cfg.qk_norm:
         q = rmsnorm(q, params["q_norm"]["scale"])
         k = rmsnorm(k, params["k_norm"]["scale"])

@@ -38,9 +38,11 @@ def init_mlp(key, cfg) -> dict:
 
 
 def mlp(params, x, cfg, constrain):
-    h = activation(dense(params["w_gate"], x), cfg.act) * dense(params["w_up"], x)
+    mm = cfg.matmul_mode
+    h = activation(dense(params["w_gate"], x, mode=mm), cfg.act) \
+        * dense(params["w_up"], x, mode=mm)
     h = constrain(h, "ffn_hidden")
-    return dense(params["w_down"], h)
+    return dense(params["w_down"], h, mode=mm)
 
 
 # --------------------------------------------------------------------------
@@ -108,7 +110,7 @@ def apply_layer_seq(
         if q_pad and q_pad != H:
             o = o[:, :, :H, :]
         o = o.reshape(x.shape[0], x.shape[1], -1)
-        o = dense(p["mixer"]["wo"], o)
+        o = dense(p["mixer"]["wo"], o, mode=cfg.matmul_mode)
         if write_cache:
             B, S = x.shape[:2]
             w = _mixer_window(mixer, cfg)
@@ -158,7 +160,8 @@ def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_a
             q, k, v, cache, pos, cap=cfg.attn_logit_softcap, window=window,
             **kv_kw,
         )
-        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], -1))
+        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], -1),
+                  mode=cfg.matmul_mode)
     else:
         o, cache = ssm_mod.ssm_block_decode(p["mixer"], h, cache, cfg)
     if cfg.post_block_norm:

@@ -2,6 +2,15 @@
 matmul entry point that transparently accepts either a plain 16-bit weight
 or a k-bit `QuantizedTensor` (the paper's technique as a first-class
 feature: any weight in any model can be swapped for its quantized form).
+
+`linear` is also where ``cfg.matmul_mode`` lands: quantized weights either
+materialize a 16-bit dequant transient and einsum ("dequant_einsum" — the
+numerical oracle), or stream packed codes + per-block scales straight
+into the fused dequant-GEMM (kernels/ops.fused_matmul: Pallas on TPU,
+the gather-free jnp path on CPU).  QTs the kernel layout cannot express
+(centering means, proxy outliers, flat odd-shape storage) silently take
+the oracle path per matrix, so a mixed tree serves with each matrix on
+its fastest correct path.
 """
 
 from __future__ import annotations
@@ -10,24 +19,51 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import QuantizedTensor, dequantize_tensor
+from repro.kernels import ops
 
 
 # --------------------------------------------------------------------------
 # linear / quantized linear
 # --------------------------------------------------------------------------
 
-def linear(x: jnp.ndarray, w, bias=None) -> jnp.ndarray:
+def resolve_matmul_mode(mode: str, w) -> str:
+    """Per-matrix dispatch decision: 'fused' or 'dequant_einsum'."""
+    if mode == "dequant_einsum":
+        return "dequant_einsum"
+    if mode not in ("auto", "fused"):
+        raise ValueError(f"unknown matmul_mode {mode!r}")
+    return "fused" if ops.qt_fused_eligible(w) else "dequant_einsum"
+
+
+def linear(x: jnp.ndarray, w, bias=None, *, mode: str = "dequant_einsum") -> jnp.ndarray:
     """y = x @ w (+ bias).
 
     `w` is either a jnp array [in, out] or a QuantizedTensor storing the
-    TRANSPOSED weight (quant_shape == (out, in)): transposed storage makes
-    the block axis the reduction dim (kernel layout,
-    docs/quantization.md#packing-layout-corepackingpy) and the
-    16-bit dequant transient is consumed immediately by the einsum.
+    weight in (out, in) kernel layout (transposed 2-D matrices, or
+    lm_head/embed which are natively [V, D]): the block axis is the
+    reduction dim (docs/quantization.md#packing-layout-corepackingpy).
+    `mode` (cfg.matmul_mode) picks the quantized execution path — see
+    the module docstring; dense weights ignore it.
     """
     if isinstance(w, QuantizedTensor):
-        wt = dequantize_tensor(w, out_dtype=x.dtype)  # [out, in]
-        y = jnp.einsum("...k,nk->...n", x, wt)
+        # fence the activation at its stated dtype: fused into a producer
+        # chain, XLA feeds the einsum unrounded f32 intermediates while
+        # the GEMM backend materializes bf16 — the modes would then see
+        # different INPUT values (same story as the output fence below)
+        x = jax.lax.optimization_barrier(x)
+        if resolve_matmul_mode(mode, w) == "fused":
+            y = ops.fused_matmul(x, ops.operand_from_qtensor(w))
+        else:
+            wt = dequantize_tensor(w, out_dtype=x.dtype)  # [out, in]
+            y = jnp.einsum("...k,nk->...n", x, wt)
+        # fence the rounded output: without it XLA folds the bf16 converts
+        # of y into whatever op fuses next, and HOW it folds depends on
+        # the surrounding graph — the two matmul modes would then drift
+        # apart by one ulp per layer under jit even though the matmuls
+        # themselves agree bit-for-bit.  The barrier makes matmul_mode a
+        # pure performance knob: greedy decode is token-identical across
+        # modes (tests/test_decode_consistency.py pins this).
+        y = jax.lax.optimization_barrier(y)
     else:
         y = x @ w.astype(x.dtype)
     if bias is not None:
@@ -130,5 +166,5 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, scale: float |
     return p
 
 
-def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
-    return linear(x, params["w"], params.get("b"))
+def dense(params: dict, x: jnp.ndarray, *, mode: str = "dequant_einsum") -> jnp.ndarray:
+    return linear(x, params["w"], params.get("b"), mode=mode)

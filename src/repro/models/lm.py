@@ -69,7 +69,9 @@ def logits_from_hidden(params, h, cfg):
     """h [..., D] -> logits [..., V] (softcapped for gemma2)."""
     w = head_matrix(params)
     if isinstance(w, QuantizedTensor):
-        out = linear(h, w)  # QT stores [V, D] == transposed head
+        # QT stores [V, D] == transposed head; cfg.matmul_mode routes it
+        # through the fused dequant-GEMM like every other matrix
+        out = linear(h, w, mode=cfg.matmul_mode)
     else:
         out = jnp.einsum("...d,vd->...v", h, w.astype(h.dtype))
     return softcap(out, cfg.final_logit_softcap)

@@ -296,12 +296,14 @@ def bits_report(qparams) -> dict:
 
 def dequantize_params(qparams):
     """Round-trip a quantized tree back to dense weights (the "noise lens"):
-    scaling-law evals run the ORIGINAL fp model code on these weights."""
+    scaling-law evals run the ORIGINAL fp model code on these weights.
+    Each leaf comes back in the dtype the quantizer saw (QuantizedTensor
+    records it as ``orig_dtype``), so a bf16 tree round-trips to bf16."""
     from repro.core.qtensor import dequantize_tensor
 
     def one(leaf):
         if isinstance(leaf, QuantizedTensor):
-            w = dequantize_tensor(leaf, out_dtype=jnp.float32)
+            w = dequantize_tensor(leaf, out_dtype=jnp.dtype(leaf.orig_dtype))
             # transposed-stored matrices go back to [In, Out]; lm_head/embed
             # are stored untransposed ([V, D]) and must stay that way
             if leaf.transposed:

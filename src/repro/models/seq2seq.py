@@ -60,7 +60,8 @@ def init_params(key, cfg) -> dict:
 
 def encode(params, frames, cfg, *, constrain=NO_CONSTRAIN, remat=False):
     """frames [B,S,D] (stub embeddings) -> memory [B,S,D]."""
-    x = dense(params["frame_proj"], frames.astype(jnp.bfloat16))
+    x = dense(params["frame_proj"], frames.astype(jnp.bfloat16),
+              mode=cfg.matmul_mode)
     x = constrain(x, "residual")
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -70,7 +71,8 @@ def encode(params, frames, cfg, *, constrain=NO_CONSTRAIN, remat=False):
         q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions)
         q = constrain(q, "heads")
         o = attn_mod.flash_attention(q, k, v, causal=False)
-        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], S, -1))
+        o = dense(p["mixer"]["wo"], o.reshape(x.shape[0], S, -1),
+                  mode=cfg.matmul_mode)
         x = constrain(x + o, "residual")
         h = norm(p["ffn_norm"], x, cfg.norm_type)
         x = constrain(x + blocks.mlp(p["ffn"], h, cfg, constrain), "residual")
@@ -88,8 +90,8 @@ def encode(params, frames, cfg, *, constrain=NO_CONSTRAIN, remat=False):
 def _cross_kv(p_attn, memory, cfg):
     B, S_m, _ = memory.shape
     K, Dh = cfg.n_kv_heads, cfg.head_dim
-    k = dense(p_attn["wk"], memory).reshape(B, S_m, K, Dh)
-    v = dense(p_attn["wv"], memory).reshape(B, S_m, K, Dh)
+    k = dense(p_attn["wk"], memory, mode=cfg.matmul_mode).reshape(B, S_m, K, Dh)
+    v = dense(p_attn["wv"], memory, mode=cfg.matmul_mode).reshape(B, S_m, K, Dh)
     return k, v
 
 
@@ -107,7 +109,8 @@ def decoder_seq(params, tokens, memory, cfg, *, constrain=NO_CONSTRAIN,
         h = norm(p["self_norm"], x, cfg.norm_type)
         q, k, v = attn_mod.project_qkv(p["self_attn"], h, cfg, positions)
         o = attn_mod.flash_attention(q, k, v, causal=True)
-        x = constrain(x + dense(p["self_attn"]["wo"], o.reshape(B, T, -1)), "residual")
+        x = constrain(x + dense(p["self_attn"]["wo"], o.reshape(B, T, -1),
+                                mode=cfg.matmul_mode), "residual")
         cache = None
         if write_cache:
             c = attn_mod.init_kv_cache(cfg, B, cfg.decoder_cache_len, k.dtype)
@@ -115,10 +118,11 @@ def decoder_seq(params, tokens, memory, cfg, *, constrain=NO_CONSTRAIN,
                                                  v[:, -cfg.decoder_cache_len:])
         # cross attention (no mask)
         h = norm(p["cross_norm"], x, cfg.norm_type)
-        qx = dense(p["cross_attn"]["wq"], h).reshape(B, T, H, Dh)
+        qx = dense(p["cross_attn"]["wq"], h, mode=cfg.matmul_mode).reshape(B, T, H, Dh)
         kx, vx = _cross_kv(p["cross_attn"], memory, cfg)
         ox = attn_mod.flash_attention(qx, kx, vx, causal=False)
-        x = constrain(x + dense(p["cross_attn"]["wo"], ox.reshape(B, T, -1)), "residual")
+        x = constrain(x + dense(p["cross_attn"]["wo"], ox.reshape(B, T, -1),
+                                mode=cfg.matmul_mode), "residual")
         # ffn
         h = norm(p["ffn_norm"], x, cfg.norm_type)
         x = constrain(x + blocks.mlp(p["ffn"], h, cfg, constrain), "residual")
@@ -171,13 +175,13 @@ def decode_step(params, token, caches, pos, cfg, *, constrain=NO_CONSTRAIN,
         q, k, v = attn_mod.project_qkv(p["self_attn"], h[:, None, :], cfg, positions)
         o, self_cache = decode_attn(q[:, 0], k[:, 0], v[:, 0], self_cache, pos,
                                     cap=0.0, window=0)
-        x = x + dense(p["self_attn"]["wo"], o.reshape(B, -1))
+        x = x + dense(p["self_attn"]["wo"], o.reshape(B, -1), mode=cfg.matmul_mode)
         h = norm(p["cross_norm"], x, cfg.norm_type)
-        qx = dense(p["cross_attn"]["wq"], h).reshape(B, H, Dh)
+        qx = dense(p["cross_attn"]["wq"], h, mode=cfg.matmul_mode).reshape(B, H, Dh)
         cross_cache = {"k": kx, "v": vx,
                        "pos": jnp.arange(kx.shape[1], dtype=jnp.int32)}
         ox = attn_mod.decode_attention(qx, cross_cache, kx.shape[1] + 1)
-        x = x + dense(p["cross_attn"]["wo"], ox.reshape(B, -1))
+        x = x + dense(p["cross_attn"]["wo"], ox.reshape(B, -1), mode=cfg.matmul_mode)
         h = norm(p["ffn_norm"], x, cfg.norm_type)
         x = x + blocks.mlp(p["ffn"], h, cfg, constrain)
         return x, (self_cache, cross_kv)

@@ -202,7 +202,7 @@ def ssm_block(params, u, cfg, initial_state=None,
 
     Bb, S, _ = u.shape
     H, P, G, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
-    zxbcdt = dense(params["in_proj"], u)
+    zxbcdt = dense(params["in_proj"], u, mode=cfg.matmul_mode)
     z, xbc, dt = _split_in_proj(zxbcdt, cfg)
 
     # depthwise causal conv over [x, B, C]
@@ -232,7 +232,7 @@ def ssm_block(params, u, cfg, initial_state=None,
     y = y.reshape(Bb, S, cfg.d_inner)
     y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
                 params["norm"]["scale"])
-    out = dense(params["out_proj"], y)
+    out = dense(params["out_proj"], y, mode=cfg.matmul_mode)
     # conv tail state for decode handoff: last cw-1 pre-conv features
     conv_state = jnp.concatenate([pad, xbc], axis=1)[:, -(cw - 1):, :]
     return out, {"state": h_final.astype(jnp.float32), "conv": conv_state}
@@ -253,7 +253,7 @@ def ssm_block_decode(params, u_t, cache, cfg):
 
     Bb = u_t.shape[0]
     H, P, G, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
-    zxbcdt = dense(params["in_proj"], u_t[:, None, :])[:, 0]
+    zxbcdt = dense(params["in_proj"], u_t[:, None, :], mode=cfg.matmul_mode)[:, 0]
     z, xbc, dt = _split_in_proj(zxbcdt, cfg)
 
     w = params["conv_w"].astype(jnp.float32)
@@ -275,5 +275,5 @@ def ssm_block_decode(params, u_t, cache, cfg):
     y = y.reshape(Bb, cfg.d_inner)
     y = rmsnorm(y.astype(u_t.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u_t.dtype),
                 params["norm"]["scale"])
-    out = dense(params["out_proj"], y[:, None, :])[:, 0]
+    out = dense(params["out_proj"], y[:, None, :], mode=cfg.matmul_mode)[:, 0]
     return out, {"state": new_state, "conv": new_conv_state}

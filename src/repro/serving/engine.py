@@ -106,7 +106,10 @@ def check_sharded_kv_quant(cfg, sharder) -> None:
 
 class Engine:
     def __init__(self, params, cfg, *, max_seq_len: int, sharder=None,
-                 eos_id: int | None = None, plan=None):
+                 eos_id: int | None = None, plan=None,
+                 matmul_mode: str | None = None):
+        if matmul_mode is not None:
+            cfg = cfg.with_matmul_mode(matmul_mode)
         check_sharded_kv_quant(cfg, sharder)
         if plan is not None:
             from repro.models.quantize import quantize_tree

@@ -74,7 +74,10 @@ class Server:
 
     def __init__(self, params, cfg, *, num_slots: int, max_seq_len: int,
                  eos_id: int | None = None, seed: int = 0,
-                 dtype=jnp.bfloat16, plan=None):
+                 dtype=jnp.bfloat16, plan=None,
+                 matmul_mode: str | None = None):
+        if matmul_mode is not None:
+            cfg = cfg.with_matmul_mode(matmul_mode)
         if plan is not None:
             from repro.models.quantize import quantize_tree
 

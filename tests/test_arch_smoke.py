@@ -12,6 +12,10 @@ from repro.configs.registry import ASSIGNED, get_arch
 from repro.models import lm, seq2seq
 from repro.train import step as step_mod
 
+# heavyweight: every registry arch compiles+steps; CI fast lane skips it
+pytestmark = pytest.mark.slow
+
+
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_forward_and_shapes(arch):

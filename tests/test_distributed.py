@@ -17,6 +17,10 @@ import pytest
 from repro.configs.registry import get_arch
 from repro.models.sharding import Sharder
 
+# heavyweight: multi-device meshes on a CPU host; CI fast lane skips it
+pytestmark = pytest.mark.slow
+
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

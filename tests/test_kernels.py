@@ -8,6 +8,10 @@ from repro.core.codebooks import make_codebook
 from repro.kernels import ops
 from repro.kernels.ref import qmatmul_ref, quantize_blocks_ref
 
+# every test here drives pallas_call in interpret mode
+pytestmark = pytest.mark.kernel
+
+
 SWEEP = [
     # (bits, dtype, M, K, N, block)
     (4, "float", 8, 256, 128, 64),

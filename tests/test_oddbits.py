@@ -74,18 +74,34 @@ def test_qtensor_odd_bits_batched_stack(bits):
         assert jnp.allclose(xr[i], dequantize_tensor(qi, out_dtype=jnp.float32))
 
 
-def test_structured_storage_falls_back_on_odd_dims():
-    """to_structured needs cols divisible by the packing word AND the
-    block size; otherwise it must return the flat layout unchanged
-    (3-bit cpw=10 on a 64-col matrix is the canonical miss)."""
+def test_structured_storage_repacks_word_tails():
+    """Odd bit-widths whose cols don't divide the packing word used to
+    fall back to flat storage; to_structured now REPACKS them row-aligned
+    (3-bit cpw=10 on a 64-col matrix), bit-identically to the flat
+    layout, so every width can feed the fused dequant-GEMM.  Only cols
+    that straddle quantization blocks still fall back."""
     x = jax.random.normal(jax.random.PRNGKey(5), (16, 64))
-    qt3 = to_structured(quantize_tensor(x, bits=3, dtype="float", block_size=16))
-    assert not qt3.structured  # 64 % 10 != 0 -> flat fallback
-    qt4 = to_structured(quantize_tensor(x, bits=4, dtype="float", block_size=16))
-    assert qt4.structured      # 64 % 8 == 0 and 64 % 16 == 0
-    assert jnp.allclose(
+    flat3 = quantize_tensor(x, bits=3, dtype="float", block_size=16)
+    qt3 = to_structured(flat3)
+    assert qt3.structured  # 64 % 10 != 0 -> row-aligned repack
+    assert qt3.packed.shape == (16, packing.packed_size(64, 3))
+    assert jnp.array_equal(
         dequantize_tensor(qt3, out_dtype=jnp.float32),
-        dequantize_tensor(
-            quantize_tensor(x, bits=3, dtype="float", block_size=16),
-            out_dtype=jnp.float32),
+        dequantize_tensor(flat3, out_dtype=jnp.float32),
+    )
+    qt4 = to_structured(quantize_tensor(x, bits=4, dtype="float", block_size=16))
+    assert qt4.structured      # 64 % 8 == 0 and 64 % 16 == 0: pure reshape
+
+
+def test_structured_storage_falls_back_on_block_straddle():
+    """cols % block_size != 0 means quantization blocks straddle rows —
+    no row-structured layout exists; the flat storage must come back
+    unchanged (and still dequantize correctly)."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 40))
+    flat = quantize_tensor(x, bits=4, dtype="float", block_size=16)
+    qt = to_structured(flat)
+    assert not qt.structured  # 40 % 16 != 0
+    assert jnp.allclose(
+        dequantize_tensor(qt, out_dtype=jnp.float32),
+        dequantize_tensor(flat, out_dtype=jnp.float32),
     )

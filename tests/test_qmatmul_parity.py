@@ -1,0 +1,213 @@
+"""Property-based parity suite for the fused k-bit dequant-GEMM.
+
+The jnp oracle (kernels/ref.qmatmul_ref) defines the semantics; every
+fused execution backend — the gather-free jnp path that serves on CPU
+and the Pallas kernel in interpret mode — must reproduce it to f32
+accumulation-order tolerance across the shapes the SERVING path
+actually produces: B=1 decode rows, [B,1,d] batched decode, [B,S,d]
+bucketed prefill, odd 3/5/6-bit word tails, reduction dims that divide
+neither the packing word nor the block size, int and LUT codebooks.
+
+This is the suite that keeps the fused hot path honest: a layout bug
+that slips past the unit sweeps (tile padding, word tails, scale-block
+alignment) shows up here as a parity break before it can rot silently
+in production (`ISSUE 4`, docs/quantization.md#the-fused-dequant-gemm-
+serving-path).
+
+Hypothesis runs derandomized with bounded examples so CI is
+deterministic; without hypothesis only the property tests skip — the
+parametrized sweeps below them (>= 20 cases) always run.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip; parametrized sweeps still run
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import QuantConfig
+from repro.core.qtensor import dequantize_tensor
+from repro.kernels import ops
+from repro.kernels.ref import qmatmul_ref
+from repro.models.layers import linear, resolve_matmul_mode
+from repro.models.quantize import _quantize_matrix
+
+REL_TOL = 2e-5  # f32 accumulation-order slack, matches test_kernels.py
+
+
+def _rel_err(y, y_ref):
+    y = y.astype(jnp.float32)
+    y_ref = y_ref.astype(jnp.float32)
+    return float(jnp.max(jnp.abs(y - y_ref))) / (
+        float(jnp.max(jnp.abs(y_ref))) + 1e-9
+    )
+
+
+def _operand(key, K, N, bits, dtype, block):
+    w = jax.random.normal(key, (K, N), jnp.float32) * 0.05
+    return ops.prepare_operand(w, bits=bits, dtype=dtype, block_size=block)
+
+
+# -------------------------------------------------------------------------
+# property tests: fused backends == oracle over the full config space
+# -------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        bits=st.sampled_from([3, 4, 5, 6, 8]),
+        dtype=st.sampled_from(["int", "float"]),
+        block=st.sampled_from([16, 32, 64]),
+        M=st.integers(1, 9),
+        K=st.integers(33, 320),
+        N=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None, derandomize=True)
+    def test_fused_jnp_matches_oracle_property(bits, dtype, block, M, K, N,
+                                               seed):
+        """The CPU-serving fused path over adversarial (M, K, N): K need
+        not divide the block size or the packing word; prepare_operand
+        pads and the wrapper pads x to the stored k_dim."""
+        key = jax.random.PRNGKey(seed)
+        op = _operand(key, K, N, bits, dtype, block)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (M, K), jnp.float32)
+        xp = jnp.pad(x, ((0, 0), (0, op.k_dim - K)))
+        assert _rel_err(ops.fused_matmul(x, op, backend="jnp"),
+                        qmatmul_ref(xp, op)) < REL_TOL
+
+    @given(
+        bits=st.sampled_from([3, 4, 5, 6, 8]),
+        dtype=st.sampled_from(["int", "float"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    def test_fused_pallas_interpret_matches_oracle_property(bits, dtype, seed):
+        """The real kernel (interpret mode on CPU) on a serving-like
+        decode shape, one property case per (bits, dtype) draw —
+        interpret mode is slow, so the shape stays small and fixed."""
+        key = jax.random.PRNGKey(seed)
+        op = _operand(key, 128, 32, bits, dtype, 32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (4, 128),
+                              jnp.float32)
+        assert _rel_err(ops.fused_matmul(x, op, backend="pallas"),
+                        qmatmul_ref(x, op)) < REL_TOL
+
+else:  # pragma: no cover - environment without hypothesis
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fused_property_suite_needs_hypothesis():
+        pass
+
+
+# -------------------------------------------------------------------------
+# parametrized sweeps: the named adversarial corners, always run
+# -------------------------------------------------------------------------
+
+SWEEP = [
+    # (bits, dtype, block, M, K, N) — K chosen to exercise word tails
+    # (K % cpw != 0 for 3/5/6-bit) and non-multiple-of-block trailing dims
+    (3, "int",   64, 8, 2048, 96),   # odd cpw=10 word tail on a real dim
+    (3, "float", 16, 1,  200, 40),   # B=1 decode row, K % 16 != 0 (pads)
+    (4, "float", 64, 8,  256, 128),  # the paper's recommended config
+    (4, "int",   32, 5,  100, 70),   # K % 32 != 0 and K % 8 != 0
+    (5, "float", 64, 8,  192, 64),   # cpw=6 tail
+    (5, "int",   16, 3,   50, 33),   # everything misaligned
+    (6, "float", 32, 8,  160, 96),   # cpw=5 tail
+    (6, "int",   64, 2,  320, 48),
+    (8, "int",   64, 8,  256, 128),  # arithmetic dequant at full width
+    (8, "float", 32, 4,  128, 64),   # 256-entry LUT
+]
+
+
+@pytest.mark.parametrize("bits,dtype,block,M,K,N", SWEEP)
+def test_fused_jnp_sweep(bits, dtype, block, M, K, N):
+    key = jax.random.PRNGKey(bits * 101 + K)
+    op = _operand(key, K, N, bits, dtype, block)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, K), jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, op.k_dim - K)))
+    assert _rel_err(ops.fused_matmul(x, op, backend="jnp"),
+                    qmatmul_ref(xp, op)) < REL_TOL
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("bits,dtype,block,M,K,N", SWEEP)
+def test_fused_pallas_interpret_sweep(bits, dtype, block, M, K, N):
+    key = jax.random.PRNGKey(bits * 101 + K)
+    op = _operand(key, K, N, bits, dtype, block)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (M, K), jnp.float32)
+    assert _rel_err(ops.fused_matmul(x, op, backend="pallas"),
+                    qmatmul_ref(jnp.pad(x, ((0, 0), (0, op.k_dim - K))), op)
+                    ) < REL_TOL
+
+
+# -------------------------------------------------------------------------
+# model-layer parity: the QuantizedTensor route the serving stack takes
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,dtype", [(3, "int"), (4, "float"), (5, "float"),
+                                        (6, "int"), (8, "int"),
+                                        (4, "quantile")])
+@pytest.mark.parametrize("shape", [(8, 1, 192), (2, 16, 192), (1, 192)])
+def test_linear_fused_matches_dequant_einsum(bits, dtype, shape):
+    """layers.linear at matmul_mode='fused' vs the dequant oracle path on
+    decode [B,1,d] / bucketed prefill [B,S,d] / single-row activations,
+    through a QT quantized exactly as models/quantize.py stores it."""
+    key = jax.random.PRNGKey(bits)
+    w = jax.random.normal(key, (192, 96)) * 0.05
+    qt = _quantize_matrix(w, QuantConfig(bits=bits, dtype=dtype, block_size=64))
+    assert resolve_matmul_mode("auto", qt) == "fused"
+    x = jax.random.normal(jax.random.fold_in(key, 1), shape, jnp.bfloat16)
+    y_f = linear(x, qt, mode="fused").astype(jnp.float32)
+    y_d = linear(x, qt, mode="dequant_einsum").astype(jnp.float32)
+    assert y_f.shape == shape[:-1] + (96,)
+    # dequant path rounds the weight transient to bf16; bound by that
+    assert float(jnp.max(jnp.abs(y_f - y_d))) < 0.05
+
+
+def test_linear_fused_under_jit_and_scan():
+    """The dispatch must trace: scan over a stacked QT (the period-scan
+    serving layout) with a jitted fused linear, vs per-layer oracle."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (3, 192, 96)) * 0.05  # [layers, In, Out]
+    qt = _quantize_matrix(w, QuantConfig(bits=4, dtype="float", block_size=64))
+    assert qt.batch_shape == (3,)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 192), jnp.float32)
+
+    @jax.jit
+    def scan_fused(qt, x):
+        return jax.lax.scan(
+            lambda c, qt_i: (c, linear(x, qt_i, mode="fused")), 0, qt
+        )[1]
+
+    ys = scan_fused(qt, x)
+    for i in range(3):
+        qt_i = jax.tree.map(lambda a: a[i], qt)
+        ref = linear(x, qt_i, mode="dequant_einsum")
+        assert _rel_err(ys[i], ref) < 1e-2
+
+
+def test_ineligible_qts_fall_back_to_oracle():
+    """Centering means and proxy outliers are not expressible in the
+    kernel operand; 'fused'/'auto' must quietly take the dequant path and
+    stay correct (resolve_matmul_mode says so explicitly)."""
+    from repro.core.qtensor import quantize_tensor, to_structured
+
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (96, 192)) * 0.05  # stored [N, K]
+    qt_c = to_structured(quantize_tensor(w, bits=4, block_size=64,
+                                         centering=True))
+    oidx = jnp.arange(4, dtype=jnp.int32)[None]
+    qt_o = to_structured(quantize_tensor(w, bits=4, block_size=64,
+                                         outlier_idx=oidx, outlier_axis=-1))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 192), jnp.float32)
+    for qt in (qt_c, qt_o):
+        assert resolve_matmul_mode("auto", qt) == "dequant_einsum"
+        y = linear(x, qt, mode="fused")
+        wt = dequantize_tensor(qt, out_dtype=jnp.float32)
+        ref = x @ wt.T
+        assert _rel_err(y, ref) < 1e-2

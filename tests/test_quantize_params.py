@@ -121,3 +121,23 @@ def test_quantized_moe_and_ssm_trees():
             ffn = qp["stack"][0]["ffn"] if name != "jamba-v0.1-52b" else qp["stack"][1]["ffn"]
             assert isinstance(ffn["w_gate"], QuantizedTensor)
             assert not isinstance(ffn["router"], jnp.ndarray.__class__) or True
+
+
+def test_dequantize_params_respects_original_dtype(tiny):
+    """Regression: dequantize_params used to hardcode float32 out; a
+    bf16 tree must round-trip to bf16 (QuantizedTensor records the
+    quantizer's input dtype as orig_dtype), and an f32 tree to f32."""
+    cfg, params = tiny
+    for dt in (jnp.bfloat16, jnp.float32):
+        cast = jax.tree.map(
+            lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, params
+        )
+        qp = quantize_params(cast, QuantConfig(bits=4), cfg)
+        back = dequantize_params(qp)
+        for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cast),
+            jax.tree_util.tree_leaves_with_path(back),
+        ):
+            assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+            assert a.shape == b.shape, pa
+            assert a.dtype == b.dtype, (pa, a.dtype, b.dtype)

@@ -181,6 +181,59 @@ def test_quantized_tree_serves(params):
 
 
 # -------------------------------------------------------------------------
+# (d) golden: fused serving path == dequant oracle, end to end
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_server_fused_token_identical_to_dequant(params, bits):
+    """Continuous batching with matmul_mode='fused' (the tentpole wiring:
+    packed codes reach the GEMM inside Server's jitted prefill/decode)
+    must stream exactly the tokens the dequant_einsum oracle serve does,
+    mid-flight admissions included."""
+    qcfg = QuantConfig(bits=bits, dtype="float", block_size=64)
+    qparams = quantize_params(params, qcfg, CFG)
+    lens, budgets = [12, 7, 10, 5], [8, 6, 7, 4]
+    prompts = [_prompts(1, L, seed=50 + i)[0] for i, L in enumerate(lens)]
+
+    def serve(mode):
+        srv = Server(qparams, CFG, num_slots=2, max_seq_len=20,
+                     matmul_mode=mode)
+        ids = [srv.submit(p, m, arrival_time=1.0 * i)
+               for i, (p, m) in enumerate(zip(prompts, budgets))]
+        res = srv.run_until_drained()
+        return [res[rid] for rid in ids]
+
+    assert serve("fused") == serve("dequant_einsum")
+
+
+def test_server_fused_mixed_plan_serves(params):
+    """A mixed plan (odd widths + one dense-16 matrix) through the fused
+    continuous-batching path matches the fused static Engine token-for-
+    token — Engine and Server resolve the same per-matrix dispatch."""
+    from repro.models.quantize import quantizable_units
+    from repro.precision import PrecisionPlan
+
+    units = sorted(quantizable_units(params, CFG))
+    widths = [3, 5, 6, 8, 16]
+    plan = PrecisionPlan(
+        arch=CFG.name, default={"bits": 4},
+        assignments={u: {"bits": widths[i % len(widths)]}
+                     for i, u in enumerate(units)},
+    )
+    B, S, N = 3, 10, 6
+    prompts = _prompts(B, S, seed=60)
+    eng = Engine(params, CFG, max_seq_len=S + N, plan=plan,
+                 matmul_mode="fused")
+    ref = np.asarray(eng.generate(jnp.asarray(prompts), N))
+    srv = Server(params, CFG, num_slots=2, max_seq_len=S + N, plan=plan,
+                 matmul_mode="fused")
+    ids = [srv.submit(prompts[b], N, arrival_time=0.5 * b) for b in range(B)]
+    res = srv.run_until_drained()
+    for b, rid in enumerate(ids):
+        assert res[rid] == list(ref[b]), b
+
+
+# -------------------------------------------------------------------------
 # satellite: the first token honors temperature
 # -------------------------------------------------------------------------
 

@@ -15,6 +15,10 @@ from repro.models.quantize import bits_report, quantize_params
 from repro.serving import perplexity
 from repro.train import loop
 
+# heavyweight: end-to-end system sweeps; CI fast lane skips it
+pytestmark = pytest.mark.slow
+
+
 
 @pytest.fixture(scope="module")
 def trained():

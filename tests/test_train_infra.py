@@ -16,6 +16,10 @@ from repro.optim import adamw, grad_compress
 from repro.serving import Engine, perplexity
 from repro.train import step as step_mod
 
+# heavyweight: real training loops; CI fast lane skips it
+pytestmark = pytest.mark.slow
+
+
 
 def test_adamw_reduces_quadratic():
     w = {"w": jnp.array([3.0, -2.0])}
