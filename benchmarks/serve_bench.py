@@ -38,14 +38,30 @@ given mode and stamps it into every CSV row (``mm=``), so a two-run
 sweep yields the fused-vs-dequant serving column next to the kernel
 microbench gate (benchmarks/kernel_bench.py).
 
+``--mesh DATAxMODEL`` serves the continuous path on a device mesh
+(sequence-sharded slot pool, column-parallel weights — the sharded
+quantized decode tentpole): every row gains a per-device KV-bytes
+column, the bench asserts the per-device bytes shrink by at least the
+seq-shard degree vs holding the whole pool on one chip, and the k-bit
+logit check still runs against the SINGLE-DEVICE bf16 oracle — the
+acceptance bound composes across both axes.  The static offline-oracle
+comparison is skipped under a mesh (the parity suite
+tests/test_sharded_serving.py pins Engine==Server there).  Pick an arch
+whose head count divides the model axis (tiny-650k on 2x4).
+
     PYTHONPATH=src python benchmarks/serve_bench.py --kv-bits 4
     PYTHONPATH=src python benchmarks/serve_bench.py --matmul-mode dequant_einsum
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python benchmarks/serve_bench.py --arch tiny-650k --mesh 2x4 \
+        --kv-bits 4 --json-out artifacts/bench/serve_sharded.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -55,6 +71,7 @@ from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
 from repro.models.quantize import quantize_params
+from repro.models.sharding import Sharder
 from repro.serving import KV_LOGIT_TOL, Engine, Server, kv_oracle_logit_gap
 
 
@@ -103,13 +120,15 @@ def _run_continuous(srv, reqs):
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         rate=4.0, max_new_range=(8, 48), quantized=True, seed=0,
-        kv_bits=None, matmul_mode="auto"):
+        kv_bits=None, matmul_mode="auto", mesh_spec=None, json_out=None):
     """kv_bits: None sweeps {16, 8, 4}; an int benches that precision
     (16-bit KV bytes are still measured for the reduction ratio).
     matmul_mode picks the QuantizedTensor dispatch for BOTH paths
     (auto resolves to the fused dequant-GEMM for eligible matrices;
     dequant_einsum is the 16-bit-transient oracle) and is reported in
-    every row so sweeps across modes are comparable."""
+    every row so sweeps across modes are comparable.  mesh_spec
+    ('DATAxMODEL') serves the continuous path on a mesh; json_out dumps
+    the stats dict next to the other bench artifacts."""
     cfg = get_arch(arch).with_matmul_mode(matmul_mode)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     if quantized:
@@ -117,6 +136,18 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         params = quantize_params(params, qcfg, cfg)
         log(f"  serving {arch} quantized {qcfg.describe()} "
             f"(matmul_mode={matmul_mode})")
+    # same parser/validation as the launcher (usage errors, not tracebacks)
+    from repro.launch.serve import parse_mesh
+
+    mesh = parse_mesh(mesh_spec)
+    params_mesh = None
+    if mesh is not None:
+        # placement depends only on the param tree, not kv_bits: place once
+        params_mesh = jax.device_put(
+            params,
+            Sharder(mesh, cfg, replicate_params_below=0)
+            .param_spec_tree(params),
+        )
 
     reqs = synthetic.serving_workload(
         cfg.vocab_size, n_requests, max_new_range=max_new_range,
@@ -134,8 +165,13 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
     bytes16 = None
     for bits in sweep:
         cfg_b = cfg.with_kv_quant(bits) if bits < 16 else cfg
-        srv = Server(params, cfg_b, num_slots=num_slots,
-                     max_seq_len=max_seq_len)
+        sharder = None
+        params_b = params
+        if mesh is not None:
+            sharder = Sharder(mesh, cfg_b, replicate_params_below=0)
+            params_b = params_mesh
+        srv = Server(params_b, cfg_b, num_slots=num_slots,
+                     max_seq_len=max_seq_len, sharder=sharder)
         kvb = srv.pool.kv_bytes()
         if bits == 16:
             bytes16 = kvb["total"]
@@ -149,7 +185,24 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
             out_c, dt_c, cstats = _run_continuous(srv, reqs)
         tps_c = total_tokens / dt_c
 
-        if bits == 16:
+        if mesh is not None:
+            # sequence sharding must actually shrink what one chip holds:
+            # at least the seq-shard degree (batch-axis sharding stacks
+            # on top when the slot count divides the data axes)
+            s_size = sharder._axis_size(sharder.decode_plan(num_slots)[1])
+            dev_shrink = kvb["total"] / max(kvb["per_device"], 1)
+            log(f"  kv{bits} mesh {mesh_spec}: "
+                f"{kvb['per_device']/1e6:.3f} MB/device "
+                f"({dev_shrink:.1f}x below the single-device pool, "
+                f"seq shards {s_size})")
+            assert dev_shrink >= s_size, (
+                f"per-device KV bytes shrank only {dev_shrink:.2f}x, "
+                f"expected >= the {s_size}-way seq-shard degree"
+            )
+            stats[f"kv{bits}_dev_shrink"] = dev_shrink
+            stats["seq_shards"] = s_size
+
+        if bits == 16 and mesh is None:
             # offline-oracle static baseline + token-identity check
             eng = Engine(params, cfg_b, max_seq_len=max_seq_len)
             for _ in range(2):
@@ -178,7 +231,10 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
             probe_len = min(len(r["prompt"]) for r in reqs[:n_probe])
             probe = np.stack([r["prompt"][:probe_len]
                               for r in reqs[:n_probe]])
-            gap, agree = kv_oracle_logit_gap(params, cfg_b, probe, 16)
+            # under --mesh the k-bit replay goes through the sharded
+            # decode path, so a sharded-numerics regression fails here
+            gap, agree = kv_oracle_logit_gap(params, cfg_b, probe, 16,
+                                             sharder=sharder)
             tol = KV_LOGIT_TOL[bits]
             line += (f"  {ratio:.2f}x fewer KV bytes, "
                      f"logit gap {gap:.3f} (tol {tol}), "
@@ -193,19 +249,32 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
             stats[f"kv{bits}_ratio"] = ratio
             stats[f"kv{bits}_logit_gap"] = gap
         log(line)
+        tag = f";mesh={mesh_spec};kv_dev_mb={kvb['per_device']/1e6:.3f}" \
+            if mesh is not None else ""
         rows.append((f"serve/continuous_kv{bits}",
                      dt_c / total_tokens * 1e6,
                      f"tok_s={tps_c:.1f};mm={matmul_mode};"
                      f"kv_mb={kvb['total']/1e6:.3f};"
-                     f"slots_equal_hbm={slots_equal_hbm}"))
+                     f"slots_equal_hbm={slots_equal_hbm}" + tag))
         stats[f"tok_s_kv{bits}"] = tps_c
+        stats[f"kv{bits}_mb"] = kvb["total"] / 1e6
+        stats[f"kv{bits}_dev_mb"] = kvb["per_device"] / 1e6
 
     stats["matmul_mode"] = matmul_mode
+    if mesh_spec is not None:
+        stats["mesh"] = mesh_spec
     if "speedup" in stats:
         log(f"  speedup: {stats['speedup']:.2f}x "
             f"(outputs token-identical at kv16)")
         rows.append(("serve/speedup", 0.0,
                      f"x={stats['speedup']:.2f};outputs_match=1"))
+    if json_out is not None:
+        path = Path(json_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"arch": arch, "num_slots": num_slots,
+             "n_requests": n_requests, **stats}, indent=2))
+        log(f"  stats -> {path}")
     return rows, stats
 
 
@@ -221,7 +290,18 @@ if __name__ == "__main__":
                     help="QuantizedTensor matmul dispatch for both the "
                          "static and continuous paths (reported as the "
                          "mm= column in every row)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve the continuous path on a device mesh "
+                         "(e.g. 2x4; product must equal the device "
+                         "count — use XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Pick an arch whose heads divide the model "
+                         "axis, e.g. tiny-650k on 2x4.")
+    ap.add_argument("--json-out", default=None, metavar="PATH.json",
+                    help="dump the stats dict as JSON (CI uploads it "
+                         "next to the other bench artifacts)")
     args = ap.parse_args()
     run(arch=args.arch, num_slots=args.num_slots,
         n_requests=args.num_requests, kv_bits=args.kv_bits,
-        matmul_mode=args.matmul_mode)
+        matmul_mode=args.matmul_mode, mesh_spec=args.mesh,
+        json_out=args.json_out)

@@ -1,12 +1,17 @@
-"""Version shims for Pallas TPU APIs.
+"""Version shims for Pallas TPU and sharding APIs.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
 0.5; the repo supports both so kernels import one helper instead of
-version-guarding at every pallas_call site.
+version-guarding at every pallas_call site.  ``shard_map`` similarly moved
+from ``jax.experimental.shard_map`` (kwarg ``check_rep``) to top-level
+``jax.shard_map`` (kwarg ``check_vma``); :func:`shard_map_compat` wraps
+whichever this jax exports so the sharded decode and the TP fused-GEMM
+dispatch run on both.
 """
 
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 _PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -17,3 +22,24 @@ _PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
 def tpu_compiler_params(**kwargs):
     """CompilerParams under whichever name this jax version exports."""
     return _PARAMS_CLS(**kwargs)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, on any supported jax.
+
+    The sharded decode bodies psum partial softmax statistics and return
+    shard-local cache slices, which the static replication checker cannot
+    express — both jax APIs take a flag to disable it, under different
+    names (``check_vma`` on >= 0.5, ``check_rep`` on the experimental
+    module this container ships)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )

@@ -19,6 +19,13 @@ k in {4, 8} is supported: both pack exactly into 32-bit words, and they are
 the paper's serving-relevant precisions.  Quantile codebooks are excluded —
 the decode-step append-quantize is streaming and needs a static codebook.
 
+A layout invariant the distributed path relies on: blocks and code words
+run along the FEATURE dim only, never across tokens, so every byte of a
+cached token (codes + scales) lives inside that token's row.  Slicing the
+``S_c`` axis therefore yields a self-contained packed cache — this is what
+lets models/sharding.py sequence-shard the packed leaves and call
+``encode_rows``/``dequant_rows`` on shard-local slices unchanged.
+
 Three read paths, one semantics:
 
   * ``dequant_rows_ref``    — pure jnp (gather) oracle; CPU / tests.

@@ -27,17 +27,21 @@ The fused dequant-GEMM has three execution backends
 
 from __future__ import annotations
 
+import contextlib
 import math
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import blockwise, packing
 from repro.core.codebooks import make_codebook
 from repro.core.qtensor import QuantizedTensor
 from repro.kernels import qmatmul as qk
 from repro.kernels import quantize as quantk
+from repro.kernels.compat import shard_map_compat
 from repro.kernels.ref import QMatmulOperand, qmatmul_ref, quantize_blocks_ref
 
 
@@ -125,6 +129,112 @@ def fused_backend() -> str:
     """Default fused-GEMM backend for this process: the Pallas kernel on
     TPU, the gather-free jnp path everywhere else."""
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# --------------------------------------------------------------------------
+# tensor-parallel dispatch scope
+# --------------------------------------------------------------------------
+
+class TPScope(NamedTuple):
+    """One active TP dispatch scope: the mesh, the column-parallel axis,
+    and the data axes rows of the activation may shard over."""
+
+    mesh: object
+    axis: str
+    dp_axes: tuple = ()
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.axis]
+
+
+#: active TPScopes, innermost last.  A trace-time stack, not device
+#: state: models/sharding.Sharder.tp_scope() pushes one around the
+#: serving jits so every fused_matmul traced inside runs column-parallel.
+_TP_SCOPES: list = []
+
+
+@contextlib.contextmanager
+def tp_dispatch_scope(mesh, axis: str = "model", dp_axes=()):
+    """While active, :func:`fused_matmul` runs column-parallel over `axis`:
+    packed codes + scales stay sharded on their output-row dim and each
+    shard runs the fused dequant-GEMM on its local rows inside a
+    shard_map (the Pallas kernel is not GSPMD-partitionable, and the jnp
+    path gets the same explicit per-shard execution so both backends
+    compute bit-identical column-parallel tiles).  `dp_axes` lets the
+    activation rows stay sharded over the data axes when they divide —
+    without it every linear would all-gather x and compute the full
+    global batch on every device."""
+    _TP_SCOPES.append(TPScope(mesh, axis, tuple(dp_axes)))
+    try:
+        yield
+    finally:
+        _TP_SCOPES.pop()
+
+
+def current_tp_scope():
+    return _TP_SCOPES[-1] if _TP_SCOPES else None
+
+
+def _row_part(tp: TPScope, m_rows: int):
+    """Partition entry for the flattened activation rows [M, K]: the
+    scope's data axes when M divides them (each shard then computes only
+    its batch slice), None (replicated) otherwise.  Row partitioning
+    cannot change any output element — each row's reduction is untouched
+    — so this is purely a compute/comms-saving choice shared by BOTH
+    matmul modes."""
+    if tp.dp_axes:
+        size = math.prod(tp.mesh.shape[a] for a in tp.dp_axes)
+        if size > 1 and m_rows % size == 0:
+            return tp.dp_axes
+    return None
+
+
+def tp_column_parallel_einsum(x, wt, tp: TPScope):
+    """``y = x @ wt.T`` with wt [N, K] sharded on rows — the
+    dequant-einsum oracle path under TP.  Runs inside the SAME explicit
+    shard_map shape as :func:`_fused_matmul_tp` so the two matmul modes
+    partition identically and greedy decode stays token-identical across
+    them on a mesh (GSPMD left to its own devices partitions the two
+    programs differently and the bf16 foldings drift)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    rows = _row_part(tp, x2.shape[0])
+
+    def local(x2, wt_local):
+        return jnp.einsum("mk,nk->mn", x2, wt_local)
+
+    y = shard_map_compat(
+        local, tp.mesh, in_specs=(P(rows), P(tp.axis)),
+        out_specs=P(rows, tp.axis),
+    )(x2, wt)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _fused_matmul_tp(x, op: QMatmulOperand, *, backend, interpret,
+                     tp: TPScope):
+    """Column-parallel fused dequant-GEMM: activation rows sharded over
+    the data axes (when they divide), operand rows sharded over the TP
+    axis, output sharded (rows, columns) accordingly."""
+    lead = x.shape[:-1]
+    x2 = _pad_x_to_k(x.reshape(-1, x.shape[-1]), op.k_dim)
+    rows = _row_part(tp, x2.shape[0])
+
+    def local(x2, packed, scales, codebook):
+        lop = QMatmulOperand(
+            packed=packed, scales=scales, codebook=codebook,
+            bits=op.bits, block_size=op.block_size, k_dim=op.k_dim,
+            dtype_name=op.dtype_name,
+        )
+        return _fused_matmul_local(x2, lop, backend=backend,
+                                   interpret=interpret)
+
+    y = shard_map_compat(
+        local, tp.mesh,
+        in_specs=(P(rows), P(tp.axis), P(tp.axis), P()),
+        out_specs=P(rows, tp.axis),
+    )(x2, op.packed, op.scales, op.codebook)
+    return y.reshape(lead + (y.shape[-1],))
 
 
 def qmatmul_fused_jnp(x2: jnp.ndarray, op: QMatmulOperand) -> jnp.ndarray:
@@ -222,18 +332,15 @@ def qmatmul(
     return y[:M, :N].reshape(lead + (N,))
 
 
-def fused_matmul(
+def _fused_matmul_local(
     x: jnp.ndarray,
     op: QMatmulOperand,
     *,
     backend: str | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Backend-dispatched fused dequant-GEMM: x [..., K<=k_dim] -> [..., N].
-
-    backend: "pallas" | "jnp" | "oracle" (None -> fused_backend()).
-    interpret only applies to the pallas backend (None -> interpret off
-    TPU, i.e. CPU parity-test mode)."""
+    """Single-shard fused dequant-GEMM body (also the per-shard body the
+    TP dispatch runs inside its shard_map)."""
     if backend is None:
         backend = fused_backend()
     lead = x.shape[:-1]
@@ -250,6 +357,32 @@ def fused_matmul(
     else:
         raise ValueError(f"unknown fused backend {backend!r}")
     return y.reshape(lead + (y.shape[-1],))
+
+
+def fused_matmul(
+    x: jnp.ndarray,
+    op: QMatmulOperand,
+    *,
+    backend: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Backend-dispatched fused dequant-GEMM: x [..., K<=k_dim] -> [..., N].
+
+    backend: "pallas" | "jnp" | "oracle" (None -> fused_backend()).
+    interpret only applies to the pallas backend (None -> interpret off
+    TPU, i.e. CPU parity-test mode).
+
+    Inside a :func:`tp_dispatch_scope` (models/sharding.Sharder.tp_scope)
+    the matmul runs column-parallel: operands whose output-row count
+    divides the TP degree keep packed/scales sharded on `model` and hit
+    the per-shard body inside a shard_map; others run the single-shard
+    body and let GSPMD place them."""
+    tp = current_tp_scope()
+    if tp is not None and op.packed.ndim == 2:
+        if tp.tp_size > 1 and op.packed.shape[0] % tp.tp_size == 0:
+            return _fused_matmul_tp(x, op, backend=backend,
+                                    interpret=interpret, tp=tp)
+    return _fused_matmul_local(x, op, backend=backend, interpret=interpret)
 
 
 def quantize_blocks(

@@ -17,6 +17,21 @@ Two modes:
 
       PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
           --mode static --batch 8 --prompt-len 32 --max-new 32
+
+Both modes serve on a device mesh with ``--mesh DATAxMODEL`` (e.g.
+``--mesh 2x4``; the product must equal the process's device count — on a
+CPU box export ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+first).  Weights go column-parallel over "model", the KV cache / slot
+pool is sequence-sharded, and this composes with every other knob:
+``--kv-bits 4 --mesh 2x4`` serves a packed 4-bit cache whose per-device
+bytes shrink by both factors (docs/serving.md#sharded-quantized-decode).
+
+Flag pairings are validated up front: ``--plan`` carries the full weight
+quantization config (conflicts with --bits/--dtype/--block-size/
+--outlier-pct), ``--dtype fp16`` skips weight quantization entirely
+(conflicts with the same three), ``--kv-block-size/--kv-dtype`` need
+``--kv-bits < 16``, and each mode rejects the other's workload flags
+instead of silently ignoring them.
 """
 
 from __future__ import annotations
@@ -33,9 +48,13 @@ from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
 from repro.models.quantize import bits_report, quantize_params, quantize_tree
+from repro.models.sharding import Sharder
 from repro.precision import PrecisionPlan
 from repro.serving import Engine, Server, perplexity
 from repro.train import step as step_mod
+
+_STATIC_ONLY = ("batch", "prompt_len")
+_CONTINUOUS_ONLY = ("num_slots", "num_requests", "rate")
 
 
 def load_params(cfg, ckpt_dir):
@@ -51,12 +70,78 @@ def load_params(cfg, ckpt_dir):
     return state.params
 
 
-def main():
+def parse_mesh(spec: str | None):
+    """'DxM' -> a ("data", "model") mesh over all local devices."""
+    if spec is None:
+        return None
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DATAxMODEL (e.g. 2x4), got {spec!r}")
+    if d * m != jax.device_count():
+        raise SystemExit(
+            f"--mesh {spec} needs {d * m} devices but this process has "
+            f"{jax.device_count()} (CPU: export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d * m})"
+        )
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
+def validate_flags(args) -> None:
+    """Audit every flag pairing BEFORE any model work: the knobs arrived
+    in different PRs (--kv-bits, --matmul-mode, --plan, --mesh) and each
+    combination must either compose or fail loudly here."""
+    quant_flags = [f for f in ("bits", "dtype", "block_size", "outlier_pct")
+                   if getattr(args, f) is not None]
+    if args.plan is not None and quant_flags:
+        raise SystemExit(
+            f"--plan carries the quantization config; drop "
+            f"--{'/--'.join(f.replace('_', '-') for f in quant_flags)} "
+            "(per-matrix settings live in the plan JSON)"
+        )
+    if args.dtype == "fp16":
+        others = [f for f in quant_flags if f != "dtype"]
+        if others:
+            raise SystemExit(
+                "--dtype fp16 skips weight quantization entirely; "
+                f"--{'/--'.join(f.replace('_', '-') for f in others)} "
+                "would be silently ignored — drop them or pick a "
+                "quantized --dtype"
+            )
+    if args.kv_bits == 16 and (args.kv_block_size is not None
+                               or args.kv_dtype is not None):
+        raise SystemExit(
+            "--kv-block-size/--kv-dtype configure the quantized KV cache; "
+            "they need --kv-bits 4 or 8 (at 16 the cache stays bf16 and "
+            "they would be silently ignored)"
+        )
+    if args.mode == "static":
+        bad = [f for f in _CONTINUOUS_ONLY if getattr(args, f) is not None]
+        if args.stream:
+            bad.append("stream")
+        if bad:
+            raise SystemExit(
+                f"--{'/--'.join(f.replace('_', '-') for f in bad)} are "
+                "continuous-mode flags; static mode sizes its batch with "
+                "--batch/--prompt-len/--max-new (or drop --mode static)"
+            )
+    else:
+        bad = [f for f in _STATIC_ONLY if getattr(args, f) is not None]
+        if bad:
+            raise SystemExit(
+                f"--{'/--'.join(f.replace('_', '-') for f in bad)} are "
+                "static-mode flags; continuous mode sizes the workload "
+                "with --num-slots/--num-requests/--max-new (or pass "
+                "--mode static)"
+            )
+
+
+def build_argparser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--ckpt-dir", default=None, help="default: random init")
-    # quantization flags default to None so --plan can reject explicit
-    # conflicts loudly instead of silently ignoring them
+    # quantization flags default to None so --plan / --dtype fp16 can
+    # reject explicit conflicts loudly instead of silently ignoring them
     ap.add_argument("--bits", type=int, default=None, help="default: 4")
     ap.add_argument("--dtype", default=None,
                     choices=["int", "float", "dynamic", "quantile", "fp16"],
@@ -75,16 +160,23 @@ def main():
                     choices=["auto", "fused", "dequant_einsum"],
                     help="QuantizedTensor matmul dispatch: fused streams "
                          "packed codes + scales into the dequant-GEMM "
-                         "(Pallas on TPU, gather-free jnp on CPU); "
+                         "(Pallas on TPU, gather-free jnp on CPU; "
+                         "column-parallel per shard under --mesh); "
                          "dequant_einsum is the 16-bit-transient oracle "
                          "path; auto resolves per matrix "
                          "(docs/quantization.md)")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[4, 8, 16],
                     help="KV-cache precision: 16 = bf16 cache, 8/4 = "
                          "blockwise-quantized packed cache")
-    ap.add_argument("--kv-block-size", type=int, default=64)
-    ap.add_argument("--kv-dtype", default="float",
-                    choices=["int", "float", "dynamic"])
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="default: 64 (needs --kv-bits < 16)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["int", "float", "dynamic"],
+                    help="default: float (needs --kv-bits < 16)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve on a device mesh, e.g. 2x4 (product must "
+                         "equal the device count; weights column-parallel "
+                         "over model, KV cache sequence-sharded)")
     ap.add_argument("--mode", choices=["continuous", "static"],
                     default="continuous")
     # static-mode flags (None = unset, so continuous mode can reject
@@ -93,36 +185,45 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    # continuous-mode workload (Poisson arrivals, mixed lengths)
-    ap.add_argument("--num-slots", type=int, default=8)
-    ap.add_argument("--num-requests", type=int, default=32)
-    ap.add_argument("--rate", type=float, default=2.0,
-                    help="mean request arrivals per engine step")
+    # continuous-mode workload (Poisson arrivals, mixed lengths); None
+    # defaults let static mode reject them symmetrically
+    ap.add_argument("--num-slots", type=int, default=None, help="default: 8")
+    ap.add_argument("--num-requests", type=int, default=None,
+                    help="default: 32")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="mean request arrivals per engine step "
+                         "(default: 2.0)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens of the first request as they land")
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    validate_flags(args)
+    mesh = parse_mesh(args.mesh)
 
     cfg = get_arch(args.arch).with_matmul_mode(args.matmul_mode)
     if args.matmul_mode != "auto":
         print(f"matmul mode: {args.matmul_mode}")
     if args.kv_bits < 16:
-        cfg = cfg.with_kv_quant(args.kv_bits, block_size=args.kv_block_size,
-                                dtype=args.kv_dtype)
-        print(f"kv cache: {args.kv_dtype}{args.kv_bits}-b{args.kv_block_size}")
+        kv_bs = args.kv_block_size if args.kv_block_size is not None else 64
+        kv_dt = args.kv_dtype if args.kv_dtype is not None else "float"
+        cfg = cfg.with_kv_quant(args.kv_bits, block_size=kv_bs, dtype=kv_dt)
+        print(f"kv cache: {kv_dt}{args.kv_bits}-b{kv_bs}")
+    # an explicit --mesh asks for real sharding even below the
+    # replicate-small-models threshold (that is the point of the flag)
+    sharder = Sharder(mesh, cfg, replicate_params_below=0) if mesh else None
+    if mesh is not None:
+        # the actual seq-shard degree depends on the batch/slot split;
+        # the continuous path prints the measured per-device pool bytes
+        print(f"mesh: {dict(mesh.shape)}")
     if args.ckpt_dir:
         params = load_params(cfg, args.ckpt_dir)
     else:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
 
     if args.plan is not None:
-        conflicts = [f for f in ("bits", "dtype", "block_size", "outlier_pct")
-                     if getattr(args, f) is not None]
-        if conflicts:
-            raise SystemExit(
-                f"--plan carries the quantization config; drop "
-                f"--{'/--'.join(c.replace('_', '-') for c in conflicts)} "
-                "(per-matrix settings live in the plan JSON)"
-            )
         plan = PrecisionPlan.load(args.plan)
         params = quantize_tree(params, cfg, plan=plan)
         rep = bits_report(params)
@@ -142,11 +243,14 @@ def main():
               f"{rep['avg_bits_per_param']:.2f} bits/param, "
               f"{rep['total_bits_ideal']/8e9:.3f} GB ideal")
 
+    if sharder is not None:
+        params = jax.device_put(params, sharder.param_spec_tree(params))
+
     if args.mode == "static":
         batch = args.batch if args.batch is not None else 8
         prompt_len = args.prompt_len if args.prompt_len is not None else 32
-        engine = Engine(params, cfg,
-                        max_seq_len=prompt_len + args.max_new)
+        engine = Engine(params, cfg, max_seq_len=prompt_len + args.max_new,
+                        sharder=sharder)
         prompts = synthetic.ZipfMarkov(cfg.vocab_size).sample(
             jax.random.PRNGKey(1), batch, prompt_len
         )
@@ -161,20 +265,21 @@ def main():
         return
 
     # continuous: Poisson-arrival mixed-length stream through the slot pool
-    if args.batch is not None or args.prompt_len is not None:
-        raise SystemExit(
-            "--batch/--prompt-len are static-mode flags; continuous mode "
-            "sizes the workload with --num-slots/--num-requests/--max-new "
-            "(or pass --mode static)"
-        )
+    num_slots = args.num_slots if args.num_slots is not None else 8
+    num_requests = args.num_requests if args.num_requests is not None else 32
+    rate = args.rate if args.rate is not None else 2.0
     reqs = synthetic.serving_workload(
-        cfg.vocab_size, args.num_requests,
+        cfg.vocab_size, num_requests,
         max_new_range=(max(1, args.max_new // 4), args.max_new),
-        rate=args.rate,
+        rate=rate,
     )
     max_seq_len = max(len(r["prompt"]) for r in reqs) + args.max_new
-    server = Server(params, cfg, num_slots=args.num_slots,
-                    max_seq_len=max_seq_len)
+    server = Server(params, cfg, num_slots=num_slots,
+                    max_seq_len=max_seq_len, sharder=sharder)
+    if sharder is not None:
+        kvb = server.pool.kv_bytes()
+        print(f"kv pool: {kvb['total']/1e6:.3f} MB total, "
+              f"{kvb['per_device']/1e6:.3f} MB/device")
     first_id = None
     t0 = time.perf_counter()
     for r in reqs:

@@ -33,6 +33,12 @@ reads dequantize the local cache slice before the same masked partial
 math, so the pos/idle-row semantics above hold verbatim.  Every entry
 point takes an optional ``kvq`` KVQuantSpec and dispatches on it plus the
 cache keys — a None spec is byte-for-byte the legacy bf16 path.
+
+Packed caches SEQUENCE-SHARD exactly like dense ones: codes and scales
+are per-token feature-dim state, so splitting the slot axis never splits
+a block or a code word.  models/sharding.Sharder.decode_attn_fn reuses
+``encode_rows``/``dequant_rows`` and the partial/combine entry points
+below inside its shard_map body — this module stays mesh-agnostic.
 """
 
 from __future__ import annotations
@@ -71,14 +77,25 @@ def init_attention(key, cfg) -> dict:
     return p
 
 
-def project_qkv(params, x, cfg, positions):
-    """x [B,S,D] -> q [B,S,H,Dh], k,v [B,S,K,Dh] with RoPE applied."""
+def project_qkv(params, x, cfg, positions, constrain=None):
+    """x [B,S,D] -> q [B,S,H,Dh], k,v [B,S,K,Dh] with RoPE applied.
+
+    `constrain` (the Sharder callback) pins the head layout BEFORE the
+    norm/RoPE math: under tensor parallelism the projections come out of
+    column-parallel weights feature-sharded, and re-sharding to heads (or
+    replicated, when the head count does not divide TP) here keeps the
+    rotation arithmetic shard-local — GSPMD resolving the layout inside
+    RoPE's split/concat instead is both slower and numerically fragile."""
     B, S, _ = x.shape
     H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     mm = cfg.matmul_mode
     q = dense(params["wq"], x, mode=mm).reshape(B, S, H, Dh)
     k = dense(params["wk"], x, mode=mm).reshape(B, S, K, Dh)
     v = dense(params["wv"], x, mode=mm).reshape(B, S, K, Dh)
+    if constrain is not None:
+        q = constrain(q, "heads")
+        k = constrain(k, "kv_heads")
+        v = constrain(v, "kv_heads")
     if cfg.qk_norm:
         q = rmsnorm(q, params["q_norm"]["scale"])
         k = rmsnorm(k, params["k_norm"]["scale"])
@@ -302,6 +319,66 @@ def write_cache_decode(cache: dict, k_new, v_new, pos, *, window: int = 0,
     v = cache["v"].at[rows, slot].set(v_new)
     p = cache["pos"].at[rows, slot].set(pos)
     return {"k": k, "v": v, "pos": p}
+
+
+def write_cache_local_window(kv_leaves: dict, pos_arr, k_new, v_new, pos, *,
+                             S_total: int, offset, window: int = 0, kvq=None):
+    """Shard-local flavor of :func:`write_cache_decode`: write one token's
+    K/V into a LOCAL slice ``[offset, offset + S_loc)`` of a
+    sequence-sharded cache — the write lands only on the shard whose
+    window contains the token's slot (``ok`` masks the rest), everything
+    else (scalar vs per-row vector ``pos``, idle-row pos=-1 clamping,
+    ring slots, append-quantize for packed caches) matches the
+    single-device function above; keep the two in lockstep.
+
+    ``kv_leaves`` maps cache keys ("k"/"v" or the packed quartet) to
+    their LOCAL slices [B, S_loc, ...]; ``pos_arr`` is the local [S_loc]
+    or per-slot [B, S_loc] position slice.  Runs inside the shard_map
+    body of models/sharding.Sharder.decode_attn_fn.  Returns
+    (updated kv_leaves, updated pos_arr)."""
+    d = dict(kv_leaves)
+    some = next(iter(d.values()))
+    B, S_loc = some.shape[0], some.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if kvq is not None:
+        feat = k_new.shape[-2] * k_new.shape[-1]
+        kp, ks = kv_dequant.encode_rows(k_new.reshape(B, feat), kvq)
+        vp, vs = kv_dequant.encode_rows(v_new.reshape(B, feat), kvq)
+        new_vals = {"k_packed": kp, "k_scales": ks,
+                    "v_packed": vp, "v_scales": vs}
+    else:
+        new_vals = {"k": k_new, "v": v_new}
+    per_slot = pos_arr.ndim == 2
+    if per_slot:
+        # vector pos [B]: each row writes its own slot; idle rows
+        # (pos=-1) land clamped with stored pos -1, i.e. masked
+        slot = jnp.clip(cache_slot(pos, S_total, window), 0, S_total - 1)
+    else:
+        slot = cache_slot(pos, S_total, window)
+    lp = slot - offset
+    ok = (lp >= 0) & (lp < S_loc)
+    lpc = jnp.clip(lp, 0, S_loc - 1)
+    if per_slot:
+        rows = jnp.arange(B)
+        for key in d:
+            new = new_vals[key]
+            sel = ok.reshape((B,) + (1,) * (new.ndim - 1))
+            cur = d[key][rows, lpc]
+            d[key] = d[key].at[rows, lpc].set(jnp.where(sel, new, cur))
+        pcur = pos_arr[rows, lpc]
+        pos_arr = pos_arr.at[rows, lpc].set(jnp.where(ok, pos, pcur))
+    else:
+        for key in d:
+            new = new_vals[key][:, None]
+            cur = jax.lax.dynamic_slice_in_dim(d[key], lpc, 1, 1)
+            d[key] = jax.lax.dynamic_update_slice_in_dim(
+                d[key], jnp.where(ok, new, cur), lpc, 1
+            )
+        pcur = jax.lax.dynamic_slice_in_dim(pos_arr, lpc, 1, 0)
+        pos_arr = jax.lax.dynamic_update_slice_in_dim(
+            pos_arr, jnp.where(ok, pos[None], pcur), lpc, 0
+        )
+    return d, pos_arr
 
 
 def write_cache_prefill(cache: dict, k_seq, v_seq, *, window: int = 0,

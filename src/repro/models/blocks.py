@@ -92,7 +92,8 @@ def apply_layer_seq(
     h = norm(p["mixer_norm"], x, cfg.norm_type)
     if mixer.startswith("attn"):
         window = _mixer_window(mixer, cfg)
-        q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions)
+        q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions,
+                                       constrain=constrain)
         H = cfg.n_heads
         if q_pad and q_pad != H:
             # zero-pad q heads so heads shard evenly over TP (sharding.py);
@@ -152,7 +153,8 @@ def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_a
         # RoPE wants positions [..., seq]: [1] broadcasts over the batch,
         # [B,1] rotates each row by its own offset.
         positions = pos_v[:, None] if pos_v.ndim else pos_v[None]
-        q, k, v = attn_mod.project_qkv(p["mixer"], h[:, None, :], cfg, positions)
+        q, k, v = attn_mod.project_qkv(p["mixer"], h[:, None, :], cfg, positions,
+                                       constrain=constrain)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         kvq = kv_spec(cfg)
         kv_kw = {} if kvq is None else {"kvq": kvq}

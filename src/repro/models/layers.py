@@ -55,7 +55,14 @@ def linear(x: jnp.ndarray, w, bias=None, *, mode: str = "dequant_einsum") -> jnp
             y = ops.fused_matmul(x, ops.operand_from_qtensor(w))
         else:
             wt = dequantize_tensor(w, out_dtype=x.dtype)  # [out, in]
-            y = jnp.einsum("...k,nk->...n", x, wt)
+            tp = ops.current_tp_scope()
+            if (tp is not None and wt.ndim == 2 and tp.tp_size > 1
+                    and wt.shape[0] % tp.tp_size == 0):
+                # same column-parallel shard_map shape as the fused path
+                # (eligibility mirrors it: 2-D storage, rows divide TP)
+                y = ops.tp_column_parallel_einsum(x, wt, tp)
+            else:
+                y = jnp.einsum("...k,nk->...n", x, wt)
         # fence the rounded output: without it XLA folds the bf16 converts
         # of y into whatever op fuses next, and HOW it folds depends on
         # the surrounding graph — the two matmul modes would then drift

@@ -19,8 +19,24 @@ Decode
     the batch is too small to fill them, e.g. long_500k batch=1); attention
     uses flash-decoding partials combined with psum inside shard_map — no
     kv-head divisibility constraints, cache memory scales with the mesh.
-  * quantized weights: packed/scale arrays sharded over their flat last
-    dim on "model" == column-parallel (contiguous rows per chip).
+    k-bit caches (cfg.kv_bits in {4, 8}) shard the SAME way: the packed
+    codes + per-block scales of a cached token are entirely feature-dim
+    state, so splitting the slot axis never splits a code word — each
+    shard append-quantizes the tokens it owns and dequantizes only its
+    local slice before the masked partial math (kernels/kv_dequant.py).
+  * quantized weights: packed/scale arrays sharded over their output-row
+    dim on "model" == column-parallel (contiguous rows per chip); inside
+    ``Sharder.tp_scope()`` the fused dequant-GEMM runs per shard on those
+    local rows (kernels/ops.tp_dispatch_scope).
+  * per-layer cache lengths that do not divide the seq-shard grid (e.g.
+    tiny ring-window caches) fall back to replicated local attention —
+    decided at decode_attn_fn SETUP time with a SeqShardFallbackWarning,
+    never silently inside the traced body.
+
+``check_decode_capability`` is the one gate for the quantized×sharded
+combination (it replaced the early-PR duplicate rejections in
+serving/engine.py and the in-body NotImplementedError here): it raises
+only for genuinely unsupported configs and names the actual caller.
 
 Without a mesh every method is a no-op, so model code is identical on CPU.
 """
@@ -28,6 +44,7 @@ Without a mesh every method is a no-op, so model code is identical on CPU.
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 
 import jax
@@ -35,10 +52,56 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.qtensor import QuantizedTensor
+from repro.kernels import kv_dequant
+from repro.kernels.compat import shard_map_compat
+from repro.kernels.kv_dequant import kv_spec
 from repro.models import attention as attn_mod
 
 _COL_MODULES = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "frame_proj", "router"}
 _ROW_MODULES = {"wo", "w_down", "out_proj"}
+
+#: the packed-cache leaves a k-bit KV cache carries instead of dense k/v
+#: (kernels/kv_dequant.py layout); all are [.., B, S_c, feat-dim-state],
+#: so they sequence-shard exactly like the dense leaves
+_KV_CACHE_KEYS = ("k", "v", "k_packed", "k_scales", "v_packed", "v_scales")
+
+
+class SeqShardFallbackWarning(UserWarning):
+    """A per-layer cache length does not divide the sequence-shard grid:
+    that layer decodes via replicated local attention (a full-cache
+    gather per step) instead of sharded flash-decoding."""
+
+
+def check_decode_capability(cfg, sharder, *,
+                            caller: str = "the serving entry point") -> None:
+    """THE capability gate for the quantized×sharded decode combination
+    (single home of what used to be engine.check_sharded_kv_quant plus a
+    ValueError/NotImplementedError pair in this module).
+
+    Sequence-sharded decode now operates directly on the packed k-bit
+    layout, so kv_bits×mesh is SERVED, not rejected.  Only genuinely
+    unsupported configs raise — a feature row that cannot pack whole
+    codes-per-word words (kv_layout), or a quantile KV codebook (kv_spec;
+    streaming append-quantize needs a static codebook).  Cache lengths
+    that do not divide the shard grid are NOT errors: decode_attn_fn
+    falls back to replicated local attention per layer and says so with
+    a SeqShardFallbackWarning at setup time.  The message names `caller`
+    so Engine and Server users each see their own entry point."""
+    try:
+        kvq = kv_spec(cfg)  # raises for quantile codebooks / bad kv_bits
+    except ValueError as e:
+        raise ValueError(f"{e} (rejected at setup for {caller})") from e
+    if kvq is None or sharder is None:
+        return
+    if getattr(sharder, "mesh", None) is None or sharder.replicate:
+        return
+    feat = cfg.n_kv_heads * cfg.head_dim
+    try:
+        kv_dequant.kv_layout(kvq, feat)
+    except ValueError as e:
+        raise ValueError(
+            f"kv_bits={cfg.kv_bits} cannot serve {caller} on a mesh: {e}"
+        ) from e
 
 
 def _maybe(axis, dim_size, axis_size):
@@ -250,11 +313,17 @@ class Sharder:
 
         def spec(path, leaf):
             keys = [getattr(k, "key", None) for k in path]
-            if "k" in keys or "v" in keys:
-                # [n_p, B, S, K, Dh]
+            if any(k in _KV_CACHE_KEYS for k in keys):
+                # dense [n_p, B, S, K, Dh] or packed/scales [n_p, B, S, X]:
+                # the slot axis is dim 2 either way (packed layouts keep
+                # all quantization state inside the token row)
                 s = _maybe(s_ax, leaf.shape[2], self._axis_size(s_ax))
-                return self._ns(None, b_ax, s, None, None)
+                lead = (None,) * (leaf.ndim - 3)
+                return self._ns(None, b_ax, s, *lead)
             if "pos" in keys:
+                if leaf.ndim == 3:  # per-slot [n_p, B, S_c]
+                    s = _maybe(s_ax, leaf.shape[2], self._axis_size(s_ax))
+                    return self._ns(None, b_ax, s)
                 s = _maybe(s_ax, leaf.shape[1], self._axis_size(s_ax))
                 return self._ns(None, s)
             if "state" in keys:  # [n_p, B, H, P, N]
@@ -268,83 +337,172 @@ class Sharder:
         return jax.tree_util.tree_map_with_path(spec, caches)
 
     # -- sharded decode attention ------------------------------------------
+    def pad_cache_len(self, cache_len: int) -> int:
+        """Round a cache budget UP so full-attention cache lengths divide
+        any seq-shard grid this mesh can produce (depending on the batch
+        split every axis may land in the seq set, so pad to the full mesh
+        size).  Engine/Server apply this at setup — extra decode room,
+        never less — leaving the fallback warning to genuinely
+        non-dividing layers (ring windows shorter than the grid)."""
+        if self.mesh is None or self.replicate:
+            return cache_len
+        n = self.mesh.size
+        return -(-cache_len // n) * n
+
+    def seq_shard_plan(self, batch: int, cache_len: int) -> dict[int, bool]:
+        """Setup-time audit of the sequence-shard decision: maps every
+        per-layer EFFECTIVE cache length this config will decode with
+        (ring-window layers cap theirs at the window) to whether it
+        divides the seq-shard grid.  False entries decode via replicated
+        local attention — the hoisted version of what used to be a silent
+        per-call branch inside the traced body."""
+        if self.mesh is None or self.replicate:
+            return {}
+        from repro.models.blocks import _mixer_window
+
+        _, s_ax = self.decode_plan(batch)
+        s_size = self._axis_size(s_ax)
+        plan: dict[int, bool] = {}
+        for mixer, _ in self.cfg.layer_schedule():
+            if not mixer.startswith("attn"):
+                continue
+            w = _mixer_window(mixer, self.cfg)
+            eff = min(cache_len, w) if w else cache_len
+            plan[eff] = eff % s_size == 0
+        return plan
+
+    def _warn_fallback(self, lengths, s_size) -> None:
+        warnings.warn(
+            f"cache length(s) {sorted(lengths)} do not divide the "
+            f"{s_size}-way sequence-shard grid: those layers fall back "
+            "to replicated local decode attention (a full-cache gather "
+            "per step). Pad the cache budget / window to a multiple of "
+            "the seq shards to keep them sharded.",
+            SeqShardFallbackWarning,
+            stacklevel=3,
+        )
+
     def decode_attn_fn(self, batch: int, cache_len: int | None = None):
         """A decode_attn callable (blocks.apply_layer_decode signature):
-        shard_map flash-decoding over the sequence-sharded cache.  Falls
-        back to the local path per-call when a cache length does not
-        divide the seq shards (e.g. tiny ring caches)."""
+        shard_map flash-decoding over the sequence-sharded cache — dense
+        bf16 or packed k-bit (the kvq kwarg the blocks layer threads in),
+        shared scalar positions (static Engine) or per-slot position
+        vectors (continuous-batching Server).
+
+        Cache lengths that do not divide the seq shards (e.g. tiny ring
+        caches) fall back to replicated local attention; passing
+        `cache_len` makes that decision HERE, at setup time, with a
+        SeqShardFallbackWarning per offending length — layers whose
+        length shows up later (no cache_len, or an unexpected shape)
+        still warn at trace time, never silently."""
         if self.mesh is None or self.replicate:
             from repro.models.blocks import local_decode_attn
 
             return local_decode_attn
 
-        if self.cfg.kv_bits < 16:
-            # fail at setup with an actionable message, not deep inside
-            # the traced shard_map body on the first decode step
-            raise ValueError(
-                f"kv_bits={self.cfg.kv_bits} is incompatible with "
-                "sequence-sharded decode (bf16 caches only). Drop "
-                "with_kv_quant()/--kv-bits or serve single-device "
-                "(serving/server.py)."
-            )
-
         b_ax, s_ax = self.decode_plan(batch)
         s_size = self._axis_size(s_ax)
-        mesh = self.mesh
+        known: dict[int, bool] = {}
+        if cache_len is not None:
+            known = self.seq_shard_plan(batch, cache_len)
+            bad = [L for L, ok in known.items() if not ok]
+            if bad:
+                self._warn_fallback(bad, s_size)
+
+        def sharded_ok(S_total: int) -> bool:
+            if S_total not in known:
+                known[S_total] = S_total % s_size == 0
+                if not known[S_total]:
+                    self._warn_fallback([S_total], s_size)
+            return known[S_total]
 
         def fn(q, k_new, v_new, cache, pos, *, cap, window, kvq=None):
-            if kvq is not None:
-                raise NotImplementedError(
-                    "sequence-sharded decode serves bf16 caches; "
-                    "kv_bits < 16 is single-device (serving/server.py)"
-                )
-            S_total = cache["k"].shape[1]
-            if S_total % s_size != 0:
+            quant = kvq is not None and "k_packed" in cache
+            ref = cache["k_packed"] if quant else cache["k"]
+            if not sharded_ok(ref.shape[1]):
                 from repro.models.blocks import local_decode_attn
 
+                kw = {"kvq": kvq} if kvq is not None else {}
                 return local_decode_attn(
-                    q, k_new, v_new, cache, pos, cap=cap, window=window
+                    q, k_new, v_new, cache, pos, cap=cap, window=window, **kw
                 )
-
-            def local(q, k_new, v_new, k, v, pos_arr, pos):
-                S_loc = k.shape[1]
-                # global slot of this write
-                slot = pos % S_total if (window and window <= S_total) else pos
-                offset = _shard_offset(s_ax, mesh) * S_loc
-                lp = slot - offset
-                ok = (lp >= 0) & (lp < S_loc)
-                lpc = jnp.clip(lp, 0, S_loc - 1)
-                kcur = jax.lax.dynamic_slice_in_dim(k, lpc, 1, 1)
-                vcur = jax.lax.dynamic_slice_in_dim(v, lpc, 1, 1)
-                k = jax.lax.dynamic_update_slice_in_dim(
-                    k, jnp.where(ok, k_new[:, None], kcur), lpc, 1)
-                v = jax.lax.dynamic_update_slice_in_dim(
-                    v, jnp.where(ok, v_new[:, None], vcur), lpc, 1)
-                pcur = jax.lax.dynamic_slice_in_dim(pos_arr, lpc, 1, 0)
-                pos_arr = jax.lax.dynamic_update_slice_in_dim(
-                    pos_arr,
-                    jnp.where(ok, jnp.asarray(pos, jnp.int32)[None], pcur), lpc, 0)
-                m, l, pv = attn_mod.decode_attention_partial(
-                    q, k, v, pos_arr, pos, cap=cap, window=window)
-                o = attn_mod.combine_partials(m, l, pv, s_ax)
-                return o.astype(q.dtype), k, v, pos_arr
-
-            Pb = P(b_ax)
-            o, k, v, pa = jax.shard_map(
-                local, mesh=mesh,
-                in_specs=(P(b_ax, None, None), P(b_ax, None, None),
-                          P(b_ax, None, None),
-                          P(b_ax, s_ax, None, None), P(b_ax, s_ax, None, None),
-                          P(s_ax), P()),
-                out_specs=(P(b_ax, None, None), P(b_ax, s_ax, None, None),
-                           P(b_ax, s_ax, None, None), P(s_ax)),
-                check_vma=False,
-            )(q, k_new, v_new, cache["k"], cache["v"], cache["pos"],
-              jnp.asarray(pos, jnp.int32))
-            B, H, Dh = q.shape
-            return o.reshape(B, H, Dh), {"k": k, "v": v, "pos": pa}
+            return self._sharded_decode(
+                q, k_new, v_new, cache, pos, cap=cap, window=window,
+                kvq=kvq if quant else None, b_ax=b_ax, s_ax=s_ax,
+            )
 
         return fn
+
+    def _sharded_decode(self, q, k_new, v_new, cache, pos, *, cap, window,
+                        kvq, b_ax, s_ax):
+        """shard_map body shared by all four (dense|packed)×(scalar|vector
+        pos) cache flavors: write the new token on the shard that owns its
+        slot, dequantize the LOCAL slice when packed, take flash-decoding
+        partials over it, psum-combine across the seq axes."""
+        mesh = self.mesh
+        keys = [k for k in _KV_CACHE_KEYS if k in cache]
+        leaves = [cache[k] for k in keys]
+        S_total = leaves[0].shape[1]
+        per_slot = cache["pos"].ndim == 2
+        pos_v = jnp.asarray(pos, jnp.int32)
+        B, H, Dh = q.shape
+        K = k_new.shape[-2]
+        feat = K * Dh
+
+        def local(q, k_new, v_new, pos_arr, pos, *lvs):
+            Bl = q.shape[0]
+            S_loc = lvs[0].shape[1]
+            offset = _shard_offset(s_ax, mesh) * S_loc
+            # the write semantics (idle rows, rings, append-quantize)
+            # live next to their single-device twin in attention.py
+            d, pos_arr = attn_mod.write_cache_local_window(
+                dict(zip(keys, lvs)), pos_arr, k_new, v_new, pos,
+                S_total=S_total, offset=offset, window=window, kvq=kvq,
+            )
+            if kvq is not None:
+                k_loc = kv_dequant.dequant_rows(
+                    d["k_packed"], d["k_scales"], kvq, feat
+                ).reshape(Bl, S_loc, K, Dh)
+                v_loc = kv_dequant.dequant_rows(
+                    d["v_packed"], d["v_scales"], kvq, feat
+                ).reshape(Bl, S_loc, K, Dh)
+            else:
+                k_loc, v_loc = d["k"], d["v"]
+            m, l, pv = attn_mod.decode_attention_partial(
+                q, k_loc, v_loc, pos_arr, pos, cap=cap, window=window
+            )
+            o = attn_mod.combine_partials(m, l, pv, s_ax)
+            return (o.astype(q.dtype), pos_arr) + tuple(d[k] for k in keys)
+
+        pos_arr_spec = P(b_ax, s_ax) if per_slot else P(s_ax)
+        pos_spec = P(b_ax) if pos_v.ndim else P()
+        leaf_specs = tuple(P(b_ax, s_ax) for _ in keys)
+        out = shard_map_compat(
+            local, mesh,
+            in_specs=(P(b_ax), P(b_ax), P(b_ax), pos_arr_spec, pos_spec)
+            + leaf_specs,
+            out_specs=(P(b_ax), pos_arr_spec) + leaf_specs,
+        )(q, k_new, v_new, cache["pos"], pos_v, *leaves)
+        new_cache = dict(zip(keys, out[2:]))
+        new_cache["pos"] = out[1]
+        return out[0].reshape(B, H, Dh), new_cache
+
+    # -- tensor-parallel fused-GEMM scope ----------------------------------
+    def tp_scope(self):
+        """Context manager activating column-parallel fused dequant-GEMM
+        dispatch (kernels/ops.tp_dispatch_scope) for everything traced
+        inside — the serving jits enter it so eligible QuantizedTensor
+        matmuls run per TP shard instead of falling back to whatever
+        GSPMD makes of a pallas_call.  A no-op without a mesh or with
+        replicated params."""
+        import contextlib
+
+        if self.mesh is None or self.replicate:
+            return contextlib.nullcontext()
+        from repro.kernels import ops
+
+        return ops.tp_dispatch_scope(self.mesh, self.tp,
+                                     dp_axes=self.dp_axes)
 
 
 def _shard_offset(s_ax, mesh):

@@ -22,16 +22,26 @@ same cache entry points): an Engine at kv_bits=16 is the bf16-cache
 oracle the quantized serve is toleranced against, and an Engine at the
 SAME kv_bits must be token-identical to the Server — cache quantization
 is per token-row, so batching composition still cannot change outputs.
+
+Passing ``sharder=`` (models/sharding.Sharder) serves on a mesh: params
+stay wherever the caller placed them, caches are re-placed onto their
+sequence-sharded layout right after prefill, decode attention goes
+through the sharder's shard_map flash-decoding (packed k-bit caches
+included), and eligible quantized matmuls run column-parallel inside
+``sharder.tp_scope()``.  ``sharding.check_decode_capability`` is the one
+gate for the quantized×sharded combination.
 """
 
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import blocks, lm
+from repro.models.sharding import check_decode_capability
 
 #: stated per-token logit tolerance of a k-bit KV cache vs the bf16-cache
 #: oracle (tiny family, float codebook, block 64) — the acceptance bound
@@ -40,7 +50,7 @@ from repro.models import blocks, lm
 KV_LOGIT_TOL = {8: 0.2, 4: 1.0}
 
 
-def kv_oracle_logit_gap(params, cfg_q, prompts, n_steps):
+def kv_oracle_logit_gap(params, cfg_q, prompts, n_steps, *, sharder=None):
     """Teacher-forced per-token logit gap of cfg_q's k-bit KV cache vs
     the bf16-cache oracle.
 
@@ -48,29 +58,55 @@ def kv_oracle_logit_gap(params, cfg_q, prompts, n_steps):
     replays the SAME token sequence through the k-bit cache — a
     deterministic comparison, unlike free-running token matching, which
     flips on near-ties.  Returns (max |logit gap| over all steps
-    including prefill, greedy-agreement fraction)."""
+    including prefill, greedy-agreement fraction).
+
+    With a ``sharder``, the k-bit replay runs through the SEQUENCE-
+    SHARDED decode path (placed params are the caller's business; the
+    oracle rollout stays single-device) — so a mesh serve is gated
+    against the same single-device bf16 oracle as the unsharded one,
+    with the sharded numerics actually in the loop."""
     import numpy as np
 
     cfg16 = cfg_q.with_kv_quant(16)
     cache_len = prompts.shape[1] + n_steps
+    if sharder is not None:
+        cache_len = sharder.pad_cache_len(cache_len)
+    B = prompts.shape[0]
 
-    def rollout(c, force=None):
-        logits, caches = lm.prefill(params, jnp.asarray(prompts), c,
-                                    cache_len=cache_len)
+    def rollout(c, force=None, shard=False):
+        kw, place, decode_kw = {}, lambda x: x, {}
+        scope = contextlib.nullcontext
+        if shard:
+            kw = dict(constrain=sharder.constrain, q_pad=sharder.head_pad())
+            place = lambda caches: jax.device_put(
+                caches, sharder.cache_spec_tree(caches, B))
+            decode_kw = dict(
+                constrain=sharder.constrain,
+                decode_attn=sharder.decode_attn_fn(B, cache_len))
+            # quantized weights route through the TP matmul dispatch so
+            # the gate exercises the same fused/dequant shard_map shapes
+            # the served path uses
+            scope = sharder.tp_scope
+        with scope():
+            logits, caches = lm.prefill(params, jnp.asarray(prompts), c,
+                                        cache_len=cache_len, **kw)
+        caches = place(caches)
         toks, logs = [], [np.asarray(logits, np.float32)]
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         toks.append(np.asarray(tok))
         for t in range(n_steps - 1):
             feed = tok if force is None else jnp.asarray(force[t])
-            logits, caches = lm.decode_step(
-                params, feed, caches, jnp.int32(prompts.shape[1] + t), c)
+            with scope():
+                logits, caches = lm.decode_step(
+                    params, feed, caches, jnp.int32(prompts.shape[1] + t), c,
+                    **decode_kw)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             toks.append(np.asarray(tok))
             logs.append(np.asarray(logits, np.float32))
         return np.stack(toks), np.stack(logs)
 
     toks16, logs16 = rollout(cfg16)
-    toksq, logsq = rollout(cfg_q, force=toks16)
+    toksq, logsq = rollout(cfg_q, force=toks16, shard=sharder is not None)
     gap = float(np.abs(logs16 - logsq).max())
     agree = float((toks16 == toksq).mean())
     return gap, agree
@@ -87,34 +123,23 @@ def sample_token(logits, key, temperature):
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 
-def check_sharded_kv_quant(cfg, sharder) -> None:
-    """Fail fast at engine setup: sequence-sharded decode serves bf16
-    caches only, so a k-bit KV cache + a sharding mesh is a config error.
-    Raising here (instead of the deep NotImplementedError inside the
-    shard_map decode at models/sharding.py) gives an actionable message
-    before any compilation happens."""
-    if cfg.kv_bits >= 16 or sharder is None:
-        return
-    if getattr(sharder, "mesh", None) is not None and not sharder.replicate:
-        raise ValueError(
-            f"kv_bits={cfg.kv_bits} is incompatible with sequence-sharded "
-            "decode (the mesh path serves bf16 KV caches). Either drop "
-            "with_kv_quant()/--kv-bits, or serve single-device "
-            "(serving/server.py, the continuous-batching path)."
-        )
-
-
 class Engine:
     def __init__(self, params, cfg, *, max_seq_len: int, sharder=None,
                  eos_id: int | None = None, plan=None,
                  matmul_mode: str | None = None):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
-        check_sharded_kv_quant(cfg, sharder)
+        check_decode_capability(
+            cfg, sharder, caller="the static Engine (serving/engine.py)"
+        )
         if plan is not None:
             from repro.models.quantize import quantize_tree
 
             params = quantize_tree(params, cfg, plan=plan)
+        if sharder is not None:
+            # extra decode room so full-attention cache lengths divide
+            # the seq-shard grid (ring windows may still fall back)
+            max_seq_len = sharder.pad_cache_len(max_seq_len)
         self.params = params
         self.cfg = cfg
         self.max_seq_len = max_seq_len
@@ -122,23 +147,28 @@ class Engine:
         self.sharder = sharder
         constrain = sharder.constrain if sharder is not None else lm.NO_CONSTRAIN
         q_pad = sharder.head_pad() if sharder is not None else None
+        tp_scope = sharder.tp_scope if sharder is not None \
+            else contextlib.nullcontext
 
-        self._prefill = jax.jit(
-            partial(
-                lm.prefill, cfg=cfg, constrain=constrain, q_pad=q_pad,
-                cache_len=max_seq_len,
-            )
-        )
+        def prefill(params, prompts):
+            with tp_scope():
+                return lm.prefill(
+                    params, prompts, cfg, constrain=constrain, q_pad=q_pad,
+                    cache_len=max_seq_len,
+                )
+
+        self._prefill = jax.jit(prefill)
 
         def step(params, token, caches, pos, key, temperature, done):
             decode_attn = (
                 sharder.decode_attn_fn(token.shape[0], max_seq_len)
                 if sharder is not None else blocks.local_decode_attn
             )
-            logits, caches = lm.decode_step(
-                params, token, caches, pos, cfg,
-                constrain=constrain, decode_attn=decode_attn,
-            )
+            with tp_scope():
+                logits, caches = lm.decode_step(
+                    params, token, caches, pos, cfg,
+                    constrain=constrain, decode_attn=decode_attn,
+                )
             nxt = sample_token(logits, key, temperature)
             if self.eos_id is not None:
                 nxt = jnp.where(done, self.eos_id, nxt)
@@ -148,6 +178,14 @@ class Engine:
         self._step = jax.jit(step, donate_argnums=(2,))
         self._first = jax.jit(sample_token)
 
+    def _place_caches(self, caches, batch: int):
+        """Move the prefill-produced caches onto their sequence-sharded
+        mesh layout so every decode step streams only local KV bytes."""
+        s = self.sharder
+        if s is None or s.mesh is None or s.replicate:
+            return caches
+        return jax.device_put(caches, s.cache_spec_tree(caches, batch))
+
     def generate(self, prompts: jnp.ndarray, max_new_tokens: int, *,
                  temperature: float = 0.0, key=None):
         """prompts [B, S] int32 -> tokens [B, max_new_tokens]."""
@@ -156,6 +194,7 @@ class Engine:
         if key is None:
             key = jax.random.PRNGKey(0)
         logits, caches = self._prefill(self.params, prompts)
+        caches = self._place_caches(caches, B)
         # the first token goes through the same temperature/categorical
         # path as decode steps (it used to be unconditionally greedy)
         key, sub = jax.random.split(key)

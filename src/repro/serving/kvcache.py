@@ -32,9 +32,18 @@ and the pos-based invalidation covers them for free — a padded tail's
 stale code words are unreachable behind pos=-1.  `kv_bytes()` reports
 the resident HBM cost, the number the kv_bits knob exists to shrink
 (docs/serving.md).
+
+A ``sharder`` places the pool onto its mesh at construction: KV leaves
+sequence-sharded (slots over the data axes when the pool divides them,
+cache positions over "model" + the rest), so each device holds only
+cache_len/seq_shards positions per slot — ``kv_bytes()['per_device']``
+measures it, and kv_bits multiplies with it (4-bit cache on an 8-way
+mesh = 1/(4×8) of the bf16 single-device resident bytes per device).
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -73,12 +82,18 @@ def scatter_row(pool, cc, slot, length):
 class SlotKVCache:
     """Fixed pool of `num_slots` decode slots over per-slot caches."""
 
-    def __init__(self, cfg, num_slots: int, cache_len: int, dtype=jnp.bfloat16):
+    def __init__(self, cfg, num_slots: int, cache_len: int, dtype=jnp.bfloat16,
+                 *, sharder=None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.caches = lm.init_caches(cfg, num_slots, cache_len, dtype,
                                      per_slot=True)
+        if sharder is not None and sharder.mesh is not None \
+                and not sharder.replicate:
+            self.caches = jax.device_put(
+                self.caches, sharder.cache_spec_tree(self.caches, num_slots)
+            )
         self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
         self.active = np.zeros(num_slots, dtype=bool)
         # absolute position of the NEXT token fed to each slot (-1 = idle)
@@ -132,14 +147,29 @@ class SlotKVCache:
     def kv_bytes(self) -> dict:
         """Resident HBM bytes of the pool's attention KV leaves (packed
         codes + scales for quantized caches, dense k/v otherwise; pos and
-        SSM state excluded — they are identical across kv_bits)."""
+        SSM state excluded — they are identical across kv_bits).
+
+        ``per_device`` sums each leaf's addressable-shard bytes: equal to
+        ``total`` single-device, ``total / (batch×seq shards)`` on a mesh
+        — the number that decides how many slots / how much context one
+        chip's HBM actually holds."""
         kv_keys = {"k", "v", "k_packed", "k_scales", "v_packed", "v_scales"}
         total = 0
+        per_device = 0
         for path, leaf in jax.tree_util.tree_leaves_with_path(self.caches):
             if any(getattr(k, "key", None) in kv_keys for k in path):
                 total += leaf.size * leaf.dtype.itemsize
+                sharding = getattr(leaf, "sharding", None)
+                if sharding is not None:
+                    per_device += (
+                        math.prod(sharding.shard_shape(leaf.shape))
+                        * leaf.dtype.itemsize
+                    )
+                else:
+                    per_device += leaf.size * leaf.dtype.itemsize
         return {
             "total": total,
+            "per_device": per_device,
             "per_slot": total / max(self.num_slots, 1),
             "per_token": total / max(self.num_slots * self.cache_len, 1),
         }

@@ -15,9 +15,15 @@ are provably masked out of a causal full-attention cache, but would
 corrupt SSM tail states and sliding-window ring buffers, and MoE
 capacity dispatch is cross-token (junk tokens shift real tokens'
 expert keep/drop), so those archs prefill at exact prompt length (one
-compile per distinct length).  Sharded (multi-host) decode
-still goes through the static Engine path; continuous batching is
-single-device for now.
+compile per distinct length).
+
+Passing ``sharder=`` serves the slot pool on a mesh: pool leaves are
+placed sequence-sharded at construction (per-device KV bytes shrink by
+the seq-shard degree — ``pool.kv_bytes()['per_device']``), the decode
+step runs the sharder's shard_map flash-decoding with the PER-SLOT
+position vector, and eligible quantized matmuls run column-parallel
+inside ``sharder.tp_scope()``.  This composes with kv_bits: the packed
+k-bit pool shards the same way (docs/serving.md#sharded-quantized-decode).
 
 Works unchanged for quantized param trees: the decode/prefill fns are
 the same lm.py entry points the static Engine uses, and quantization is
@@ -35,6 +41,7 @@ the ~16/k HBM saving that buys more slots or longer contexts.
 
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
@@ -43,6 +50,7 @@ import numpy as np
 
 from repro.kernels.kv_dequant import kv_spec
 from repro.models import blocks, lm
+from repro.models.sharding import check_decode_capability
 from repro.serving.engine import sample_token
 from repro.serving.kvcache import SlotKVCache, scatter_row
 from repro.serving.scheduler import Request, Scheduler
@@ -75,18 +83,28 @@ class Server:
     def __init__(self, params, cfg, *, num_slots: int, max_seq_len: int,
                  eos_id: int | None = None, seed: int = 0,
                  dtype=jnp.bfloat16, plan=None,
-                 matmul_mode: str | None = None):
+                 matmul_mode: str | None = None, sharder=None):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
+        check_decode_capability(
+            cfg, sharder,
+            caller="the continuous-batching Server (serving/server.py)",
+        )
         if plan is not None:
             from repro.models.quantize import quantize_tree
 
             params = quantize_tree(params, cfg, plan=plan)
+        if sharder is not None:
+            # extra decode room so full-attention cache lengths divide
+            # the seq-shard grid (ring windows may still fall back)
+            max_seq_len = sharder.pad_cache_len(max_seq_len)
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id
+        self.sharder = sharder
         self.kvq = kv_spec(cfg)  # None = bf16 cache; else packed k-bit
-        self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype)
+        self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype,
+                                sharder=sharder)
         self.scheduler = Scheduler(eos_id=eos_id)
         self._key = jax.random.PRNGKey(seed)
         self._bucketed = _bucketing_safe(cfg)
@@ -94,6 +112,14 @@ class Server:
         self._temps = np.zeros(num_slots, dtype=np.float32)
         self.steps = 0          # decode steps executed (virtual clock)
         self.tokens_out = 0     # total generated tokens
+        constrain = sharder.constrain if sharder is not None else lm.NO_CONSTRAIN
+        q_pad = sharder.head_pad() if sharder is not None else None
+        tp_scope = sharder.tp_scope if sharder is not None \
+            else contextlib.nullcontext
+        # setup-time decode-attention decision: non-dividing cache lengths
+        # warn ONCE here (SeqShardFallbackWarning), not inside the trace
+        decode_attn = (sharder.decode_attn_fn(num_slots, max_seq_len)
+                       if sharder is not None else blocks.local_decode_attn)
 
         def prefill_into_slot(params, pool, prompt, length, slot, key,
                               temperature):
@@ -102,12 +128,14 @@ class Server:
             positions are causally downstream and cannot affect it), and
             scatter the KV rows into `slot` — one dispatch per
             admission, no full-cache intermediate leaving the jit."""
-            h, caches, _ = lm.backbone_seq(
-                params, prompt, cfg, write_cache=True,
-                cache_len=max_seq_len,
-            )
-            h_last = jax.lax.dynamic_index_in_dim(h, length - 1, 1, keepdims=False)
-            logits = lm.logits_from_hidden(params, h_last, cfg)
+            with tp_scope():
+                h, caches, _ = lm.backbone_seq(
+                    params, prompt, cfg, constrain=constrain, q_pad=q_pad,
+                    write_cache=True, cache_len=max_seq_len,
+                )
+                h_last = jax.lax.dynamic_index_in_dim(h, length - 1, 1,
+                                                      keepdims=False)
+                logits = lm.logits_from_hidden(params, h_last, cfg)
             tok = sample_token(logits, key, temperature)
             pool = scatter_row(pool, caches, slot, length)
             return tok, pool
@@ -115,10 +143,11 @@ class Server:
         self._prefill = jax.jit(prefill_into_slot, donate_argnums=(1,))
 
         def step(params, tok, caches, pos, key, temps):
-            logits, caches = lm.decode_step(
-                params, tok, caches, pos, cfg,
-                decode_attn=blocks.local_decode_attn,
-            )
+            with tp_scope():
+                logits, caches = lm.decode_step(
+                    params, tok, caches, pos, cfg,
+                    constrain=constrain, decode_attn=decode_attn,
+                )
             nxt = sample_token(logits, key, temps)
             return nxt, caches
 

@@ -291,14 +291,17 @@ def test_engine_server_identical_with_plan():
 
 
 # -------------------------------------------------------------------------
-# satellite: sharded decode x kv-quant rejected at setup, not deep in
-# the shard_map body (regression for models/sharding.py NotImplemented)
+# satellite: quantized x sharded decode is now SERVED through one
+# capability gate (models/sharding.check_decode_capability) — the old
+# duplicated rejections (engine.check_sharded_kv_quant + the ValueError/
+# NotImplementedError pair in sharding.py) are gone, and non-dividing
+# ring caches fall back with a setup-time warning instead of silently
 # -------------------------------------------------------------------------
 
 class _FakeMesh:  # duck-typed like tests/test_distributed.py
     axis_names = ("data", "model")
-    shape = {"data": 1, "model": 1}
-    size = 1
+    shape = {"data": 2, "model": 4}
+    size = 8
 
 
 def _fake_sharded_sharder(cfg):
@@ -307,27 +310,56 @@ def _fake_sharded_sharder(cfg):
     s = Sharder.__new__(Sharder)
     s.mesh = _FakeMesh()
     s.cfg = cfg
-    s.tp_size = 1
+    s.tp = "model"
+    s.dp_axes = ("data",)
+    s.tp_size = 4
+    s.dp_size = 2
     s.replicate = False
     return s
 
 
-def test_engine_rejects_kv_quant_with_sharded_decode():
-    from repro.serving import Engine
-    from repro.serving.engine import check_sharded_kv_quant
+def test_kv_quant_with_sharded_decode_is_served():
+    from repro.models.sharding import check_decode_capability
 
     cfg = get_arch("tiny-160k").with_kv_quant(4)
     sharder = _fake_sharded_sharder(cfg)
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    with pytest.raises(ValueError, match="kv_bits"):
-        Engine(params, cfg, max_seq_len=16, sharder=sharder)
-    # bf16 cache or replicated/no-mesh sharders pass the check
-    check_sharded_kv_quant(cfg.with_kv_quant(16), sharder)
-    check_sharded_kv_quant(cfg, None)
+    # every legal combination passes the one capability gate
+    for c, s in ((cfg, sharder), (cfg.with_kv_quant(16), sharder),
+                 (cfg, None), (cfg.with_kv_quant(8), sharder)):
+        check_decode_capability(c, s, caller="test")
+    # the only genuinely unsupported config still raises, with context:
+    # a quantile codebook cannot serve the streaming append-quantize path
+    import dataclasses
+
+    with pytest.raises(ValueError, match="quantile"):
+        check_decode_capability(
+            dataclasses.replace(cfg, kv_dtype="quantile"), sharder,
+            caller="test",
+        )
+    # the old deep rejections stayed deleted
+    import repro.serving.engine as engine_mod
+
+    assert not hasattr(engine_mod, "check_sharded_kv_quant")
 
 
-def test_sharder_decode_attn_fn_rejects_kv_quant():
+def test_sharder_decode_attn_fn_accepts_kv_quant_and_warns_on_ring():
+    import dataclasses
+    import warnings
+
+    from repro.models.sharding import SeqShardFallbackWarning
+
     cfg = get_arch("tiny-160k").with_kv_quant(8)
     sharder = _fake_sharded_sharder(cfg)
-    with pytest.raises(ValueError, match="kv_bits"):
-        sharder.decode_attn_fn(batch=2, cache_len=32)
+    # kvq no longer raises; cache lengths that divide the 4-way seq grid
+    # build the sharded path without a fallback warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SeqShardFallbackWarning)
+        fn = sharder.decode_attn_fn(batch=2, cache_len=32)
+    assert callable(fn)
+    # a tiny ring cache (window 6 on a 4-way grid) is DECIDED AT SETUP:
+    # warned once here, never silently inside the traced body
+    ring = dataclasses.replace(cfg, sliding_window=6)
+    sharder_ring = _fake_sharded_sharder(ring)
+    with pytest.warns(SeqShardFallbackWarning, match="6"):
+        sharder_ring.decode_attn_fn(batch=2, cache_len=32)
+    assert sharder_ring.seq_shard_plan(2, 32) == {6: False}
