@@ -16,6 +16,7 @@ from repro.configs.tiny import TINY_FAMILY
 from repro.data.synthetic import ZipfMarkov
 from repro.models.quantize import bits_report, quantize_params
 from repro.serving import perplexity
+from repro.serving.telemetry import LATENCY_BUCKETS, Histogram
 from repro.train import loop
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
@@ -76,13 +77,25 @@ def evaluate_quant(cfg, params, qcfg: QuantConfig | None, toks):
             rep["total_bits_ideal"])
 
 
-def timed(fn, *args, repeats=3):
+def sample_times(fn, *args, repeats=30) -> Histogram:
+    """Per-call wall times (one block_until_ready fence per call) into a
+    serving-telemetry Histogram — benches and the live server share one
+    sample type, so every estimator (mean / exact percentile /
+    fastest_mean) is defined in exactly one place
+    (src/repro/serving/telemetry.py)."""
     fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
+    h = Histogram(LATENCY_BUCKETS)
     for _ in range(repeats):
+        t0 = time.perf_counter()
         r = fn(*args)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / repeats * 1e6  # us
+        jax.block_until_ready(r)
+        h.observe(time.perf_counter() - t0)
+    return h
+
+
+def timed(fn, *args, repeats=3):
+    """Mean wall time per call after a compile warmup (us)."""
+    return sample_times(fn, *args, repeats=repeats).mean * 1e6
 
 
 def timed_robust(fn, *args, repeats=30):
@@ -90,16 +103,19 @@ def timed_robust(fn, *args, repeats=30):
     estimator for gated speedup ratios on noisy shared-CPU runners
     (scheduler preemption only ever ADDS time, so the fast tail is the
     honest hardware number)."""
-    fn(*args)  # warmup/compile
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        r = fn(*args)
-        jax.block_until_ready(r)
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    keep = max(1, repeats // 2)
-    return sum(ts[:keep]) / keep * 1e6  # us
+    return sample_times(fn, *args, repeats=repeats).fastest_mean(0.5) * 1e6
+
+
+def compile_warm(fn, passes: int = 2):
+    """Run `fn` `passes` times and return the LAST result: the serving
+    benches' two-pass idiom — the first pass through a fresh
+    Engine/Server triggers jit compilation, the returned pass is
+    compile-warm.  `fn` must reuse the same instance across calls (the
+    jitted closures live per instance)."""
+    r = None
+    for _ in range(passes):
+        r = fn()
+    return r
 
 
 def emit(rows):

@@ -18,8 +18,17 @@ Both paths run the same jitted decode math over the same params, so
 tok/s differences are pure scheduling; greedy outputs are verified
 token-identical per request before any number is reported.  Each path
 serves the workload twice THROUGH THE SAME Engine/Server instance (the
-jitted closures live per instance, so a fresh instance would recompile)
-and the second, compile-warm pass is timed.
+jitted closures live per instance, so a fresh instance would recompile;
+benchmarks/common.compile_warm) and the second, compile-warm pass is
+timed.
+
+Per-request latency comes from the serving telemetry subsystem
+(docs/observability.md): each Engine/Server is built with a recording
+``Telemetry``, reset between the compile pass and the timed pass, and
+the reported p50/p99 TTFT and inter-token-latency columns are read
+straight off the ``serve_ttft_seconds``/``serve_itl_seconds``
+histograms — the same instrument a live serve exports, not a
+bench-local stopwatch.
 
 KV-cache precision (the tentpole knob, docs/serving.md): by default the
 bench sweeps kv_bits in {16, 8, 4} and reports, per precision, tok/s,
@@ -60,19 +69,25 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 import jax
 import numpy as np
 
+if __package__ in (None, ""):  # script mode: python benchmarks/serve_bench.py
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import common
 from repro.configs import QuantConfig
 from repro.configs.registry import get_arch
 from repro.data import synthetic
 from repro.models import lm
 from repro.models.quantize import quantize_params
 from repro.models.sharding import Sharder
-from repro.serving import KV_LOGIT_TOL, Engine, Server, kv_oracle_logit_gap
+from repro.serving import (KV_LOGIT_TOL, Engine, Server, Telemetry,
+                           kv_oracle_logit_gap)
 
 
 def _run_static(eng, reqs, *, num_slots):
@@ -116,6 +131,20 @@ def _run_continuous(srv, reqs):
     lat = [r.finished_at - r.arrival_time for r in fin]
     return outs, dt, {"steps": srv.steps - clock0,
                       "mean_latency_steps": float(np.mean(lat))}
+
+
+def _latency_columns(tel) -> tuple[dict, str]:
+    """p50/p99 TTFT + inter-token latency (ms) off the telemetry
+    histograms of one timed pass: ({suffix: ms}, derived-column str)."""
+    cols = {}
+    for key, name in (("ttft", "serve_ttft_seconds"),
+                      ("itl", "serve_itl_seconds")):
+        h = tel.registry.histogram(name)
+        for p in (50, 99):
+            cols[f"{key}_p{p}_ms"] = h.percentile(p) * 1e3 if h.count \
+                else float("nan")
+    derived = ";".join(f"{k}={v:.2f}" for k, v in cols.items())
+    return cols, derived
 
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
@@ -170,8 +199,10 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         if mesh is not None:
             sharder = Sharder(mesh, cfg_b, replicate_params_below=0)
             params_b = params_mesh
+        tel = Telemetry()
         srv = Server(params_b, cfg_b, num_slots=num_slots,
-                     max_seq_len=max_seq_len, sharder=sharder)
+                     max_seq_len=max_seq_len, sharder=sharder,
+                     telemetry=tel)
         kvb = srv.pool.kv_bytes()
         if bits == 16:
             bytes16 = kvb["total"]
@@ -180,10 +211,16 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
             log(f"  kv16: {kvb['total']/1e6:7.3f} MB pool (byte baseline)")
             continue
 
-        # continuous: pass 1 compiles, pass 2 is timed compile-warm
-        for _ in range(2):
-            out_c, dt_c, cstats = _run_continuous(srv, reqs)
+        # continuous: pass 1 compiles, pass 2 is timed compile-warm; the
+        # telemetry reset keeps the histograms to the warm pass only
+        def _pass_c(srv=srv, tel=tel):
+            tel.reset()
+            srv.pool.record_footprint()
+            return _run_continuous(srv, reqs)
+
+        out_c, dt_c, cstats = common.compile_warm(_pass_c)
         tps_c = total_tokens / dt_c
+        lat_c, lat_c_str = _latency_columns(tel)
 
         if mesh is not None:
             # sequence sharding must actually shrink what one chip holds:
@@ -204,9 +241,15 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
 
         if bits == 16 and mesh is None:
             # offline-oracle static baseline + token-identity check
-            eng = Engine(params, cfg_b, max_seq_len=max_seq_len)
-            for _ in range(2):
-                out_s, dt_s = _run_static(eng, reqs, num_slots=num_slots)
+            tel_s = Telemetry()
+            eng = Engine(params, cfg_b, max_seq_len=max_seq_len,
+                         telemetry=tel_s)
+
+            def _pass_s(eng=eng, tel_s=tel_s):
+                tel_s.reset()
+                return _run_static(eng, reqs, num_slots=num_slots)
+
+            out_s, dt_s = common.compile_warm(_pass_s)
             mism = [i for i in range(n_requests) if out_s[i] != out_c[i]]
             if mism:
                 raise AssertionError(
@@ -214,17 +257,28 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
                 )
             tps_s = total_tokens / dt_s
             speedup = tps_c / tps_s
+            lat_s, lat_s_str = _latency_columns(tel_s)
             log(f"  static:     {dt_s:.2f}s  {tps_s:8.1f} tok/s "
-                f"(offline-oracle grouping)")
+                f"(offline-oracle grouping; ttft p50 "
+                f"{lat_s['ttft_p50_ms']:.1f}ms p99 "
+                f"{lat_s['ttft_p99_ms']:.1f}ms, itl p50 "
+                f"{lat_s['itl_p50_ms']:.2f}ms p99 "
+                f"{lat_s['itl_p99_ms']:.2f}ms)")
             rows.append(("serve/static", dt_s / total_tokens * 1e6,
-                         f"tok_s={tps_s:.1f};mm={matmul_mode}"))
+                         f"tok_s={tps_s:.1f};mm={matmul_mode};" + lat_s_str))
             stats.update({"tok_s_static": tps_s, "speedup": speedup})
+            stats.update({f"static_{k}": v for k, v in lat_s.items()})
 
         slots_equal_hbm = int(num_slots * bytes16 / max(kvb["total"], 1))
         line = (f"  kv{bits}: {dt_c:.2f}s {tps_c:8.1f} tok/s  "
                 f"{kvb['total']/1e6:7.3f} MB pool "
                 f"({kvb['per_token']:.1f} B/token, "
-                f"max {slots_equal_hbm} slots in the kv16 budget)")
+                f"max {slots_equal_hbm} slots in the kv16 budget)\n"
+                f"        ttft p50 {lat_c['ttft_p50_ms']:.1f}ms "
+                f"p99 {lat_c['ttft_p99_ms']:.1f}ms, "
+                f"itl p50 {lat_c['itl_p50_ms']:.2f}ms "
+                f"p99 {lat_c['itl_p99_ms']:.2f}ms, "
+                f"batch fill {tel.registry.histogram('serve_batch_fill').mean:.2f}")
         if bits < 16:
             ratio = bytes16 / kvb["total"]
             n_probe = min(4, n_requests)
@@ -255,10 +309,14 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
                      dt_c / total_tokens * 1e6,
                      f"tok_s={tps_c:.1f};mm={matmul_mode};"
                      f"kv_mb={kvb['total']/1e6:.3f};"
-                     f"slots_equal_hbm={slots_equal_hbm}" + tag))
+                     f"slots_equal_hbm={slots_equal_hbm};"
+                     + lat_c_str + tag))
         stats[f"tok_s_kv{bits}"] = tps_c
         stats[f"kv{bits}_mb"] = kvb["total"] / 1e6
         stats[f"kv{bits}_dev_mb"] = kvb["per_device"] / 1e6
+        stats.update({f"kv{bits}_{k}": v for k, v in lat_c.items()})
+        stats[f"kv{bits}_batch_fill"] = \
+            tel.registry.histogram("serve_batch_fill").mean
 
     stats["matmul_mode"] = matmul_mode
     if mesh_spec is not None:

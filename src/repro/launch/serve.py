@@ -26,11 +26,21 @@ pool is sequence-sharded, and this composes with every other knob:
 ``--kv-bits 4 --mesh 2x4`` serves a packed 4-bit cache whose per-device
 bytes shrink by both factors (docs/serving.md#sharded-quantized-decode).
 
+Telemetry (docs/observability.md): ``--metrics-out metrics.prom`` and/or
+``--trace-out trace.jsonl`` swap the default no-op recorder for a
+recording ``Telemetry`` — the serve then prints a p50/p99 TTFT and
+inter-token-latency summary and dumps the Prometheus text exposition /
+the JSONL span trace (validate it with
+``python -m repro.serving.trace trace.jsonl``).  ``--kv-probe-every N``
+additionally measures the append-quantize roundtrip error of every Nth
+admission's K/V rows (continuous mode, quantized cache only).
+
 Flag pairings are validated up front: ``--plan`` carries the full weight
 quantization config (conflicts with --bits/--dtype/--block-size/
 --outlier-pct), ``--dtype fp16`` skips weight quantization entirely
 (conflicts with the same three), ``--kv-block-size/--kv-dtype`` need
-``--kv-bits < 16``, and each mode rejects the other's workload flags
+``--kv-bits < 16``, ``--kv-probe-every`` needs a quantized cache plus a
+telemetry sink, and each mode rejects the other's workload flags
 instead of silently ignoring them.
 """
 
@@ -50,7 +60,8 @@ from repro.models import lm
 from repro.models.quantize import bits_report, quantize_params, quantize_tree
 from repro.models.sharding import Sharder
 from repro.precision import PrecisionPlan
-from repro.serving import Engine, Server, perplexity
+from repro.serving import NOOP, Engine, Server, Telemetry, perplexity
+from repro.serving.telemetry import record_quant_health
 from repro.train import step as step_mod
 
 _STATIC_ONLY = ("batch", "prompt_len")
@@ -115,10 +126,28 @@ def validate_flags(args) -> None:
             "they need --kv-bits 4 or 8 (at 16 the cache stays bf16 and "
             "they would be silently ignored)"
         )
+    if args.kv_probe_every is not None:
+        if args.kv_probe_every < 1:
+            raise SystemExit("--kv-probe-every wants a positive admission "
+                             f"stride, got {args.kv_probe_every}")
+        if args.kv_bits == 16:
+            raise SystemExit(
+                "--kv-probe-every measures the append-quantize roundtrip "
+                "error of the packed KV cache; it needs --kv-bits 4 or 8 "
+                "(a bf16 cache has nothing to probe)"
+            )
+        if args.metrics_out is None and args.trace_out is None:
+            raise SystemExit(
+                "--kv-probe-every records kv_append_qerr_* gauges but no "
+                "telemetry sink is configured — add --metrics-out (and/or "
+                "--trace-out) or drop the probe"
+            )
     if args.mode == "static":
         bad = [f for f in _CONTINUOUS_ONLY if getattr(args, f) is not None]
         if args.stream:
             bad.append("stream")
+        if args.kv_probe_every is not None:
+            bad.append("kv_probe_every")
         if bad:
             raise SystemExit(
                 f"--{'/--'.join(f.replace('_', '-') for f in bad)} are "
@@ -195,13 +224,56 @@ def build_argparser() -> argparse.ArgumentParser:
                          "(default: 2.0)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens of the first request as they land")
+    # telemetry sinks (docs/observability.md); either flag swaps the
+    # no-op recorder for a recording Telemetry
+    ap.add_argument("--metrics-out", default=None, metavar="PATH.prom",
+                    help="write the Prometheus text exposition of the "
+                         "serve's metrics registry here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
+                    help="write the per-request span trace (JSONL, schema "
+                         "in serving/trace.py) here")
+    ap.add_argument("--kv-probe-every", type=int, default=None, metavar="N",
+                    help="measure the append-quantize roundtrip error of "
+                         "every Nth admission's K/V rows (continuous mode; "
+                         "needs --kv-bits < 16 and a telemetry sink)")
     return ap
+
+
+def _finish_telemetry(tel, args) -> None:
+    """Print the latency summary and flush the configured sinks."""
+    if not tel.enabled:
+        return
+    parts = []
+    for label, name in (("ttft", "serve_ttft_seconds"),
+                        ("itl", "serve_itl_seconds")):
+        h = tel.registry.histogram(name)
+        if h.count:
+            parts.append(f"{label} p50 {h.percentile(50) * 1e3:.1f}ms "
+                         f"p99 {h.percentile(99) * 1e3:.1f}ms")
+    if parts:
+        print("telemetry: " + "; ".join(parts))
+    qerr = tel.registry.gauge("kv_append_qerr_rms")
+    if tel.kv_probe_every and qerr.value:
+        print(f"kv append-quantize probe: rms {qerr.value:.4f} "
+              f"(max {tel.registry.gauge('kv_append_qerr_max').value:.4f})")
+    tel.write(metrics_out=args.metrics_out, trace_out=args.trace_out)
+    if args.metrics_out:
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        n = len(tel.tracer.events)
+        print(f"trace -> {args.trace_out} ({n} events; validate with "
+              f"python -m repro.serving.trace {args.trace_out})")
 
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
     validate_flags(args)
     mesh = parse_mesh(args.mesh)
+    telemetry = NOOP
+    if args.metrics_out is not None or args.trace_out is not None:
+        telemetry = Telemetry(
+            kv_probe_every=args.kv_probe_every
+            if args.kv_probe_every is not None else 0)
 
     cfg = get_arch(args.arch).with_matmul_mode(args.matmul_mode)
     if args.matmul_mode != "auto":
@@ -225,6 +297,9 @@ def main(argv=None):
 
     if args.plan is not None:
         plan = PrecisionPlan.load(args.plan)
+        # quant-health snapshot wants the raw tree (bits + blockwise qerr
+        # per matrix); afterwards the Engine/Server only sees bits
+        record_quant_health(telemetry, params, cfg, plan=plan)
         params = quantize_tree(params, cfg, plan=plan)
         rep = bits_report(params)
         print(f"quantized per plan {args.plan} ({plan.describe()}): "
@@ -237,6 +312,7 @@ def main(argv=None):
                            if args.block_size is not None else 64,
                            outlier_pct=args.outlier_pct
                            if args.outlier_pct is not None else 0.0)
+        record_quant_health(telemetry, params, cfg, qcfg=qcfg)
         params = quantize_params(params, qcfg, cfg)
         rep = bits_report(params)
         print(f"quantized {qcfg.describe()}: "
@@ -250,7 +326,7 @@ def main(argv=None):
         batch = args.batch if args.batch is not None else 8
         prompt_len = args.prompt_len if args.prompt_len is not None else 32
         engine = Engine(params, cfg, max_seq_len=prompt_len + args.max_new,
-                        sharder=sharder)
+                        sharder=sharder, telemetry=telemetry)
         prompts = synthetic.ZipfMarkov(cfg.vocab_size).sample(
             jax.random.PRNGKey(1), batch, prompt_len
         )
@@ -262,6 +338,7 @@ def main(argv=None):
         print(f"generated {toks} tokens in {dt:.2f}s "
               f"({toks/dt:.1f} tok/s batched)")
         print("sample:", out[0].tolist())
+        _finish_telemetry(telemetry, args)
         return
 
     # continuous: Poisson-arrival mixed-length stream through the slot pool
@@ -275,7 +352,8 @@ def main(argv=None):
     )
     max_seq_len = max(len(r["prompt"]) for r in reqs) + args.max_new
     server = Server(params, cfg, num_slots=num_slots,
-                    max_seq_len=max_seq_len, sharder=sharder)
+                    max_seq_len=max_seq_len, sharder=sharder,
+                    telemetry=telemetry)
     if sharder is not None:
         kvb = server.pool.kv_bytes()
         print(f"kv pool: {kvb['total']/1e6:.3f} MB total, "
@@ -301,6 +379,7 @@ def main(argv=None):
     print(f"latency (engine steps): mean {np.mean(lat):.1f} "
           f"p95 {np.percentile(lat, 95):.1f}")
     print("sample:", results[first_id])
+    _finish_telemetry(telemetry, args)
 
 
 if __name__ == "__main__":

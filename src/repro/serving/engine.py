@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.models import blocks, lm
 from repro.models.sharding import check_decode_capability
+from repro.serving.telemetry import NOOP, record_quant_health, record_tree_bits
 
 #: stated per-token logit tolerance of a k-bit KV cache vs the bf16-cache
 #: oracle (tiny family, float codebook, block 64) — the acceptance bound
@@ -126,16 +127,22 @@ def sample_token(logits, key, temperature):
 class Engine:
     def __init__(self, params, cfg, *, max_seq_len: int, sharder=None,
                  eos_id: int | None = None, plan=None,
-                 matmul_mode: str | None = None):
+                 matmul_mode: str | None = None, telemetry=NOOP):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
         check_decode_capability(
             cfg, sharder, caller="the static Engine (serving/engine.py)"
         )
+        self.telemetry = telemetry
         if plan is not None:
             from repro.models.quantize import quantize_tree
 
+            # load-time quantization health: per-matrix bits + blockwise
+            # qerr, measured on the raw tree before it is consumed
+            record_quant_health(telemetry, params, cfg, plan=plan)
             params = quantize_tree(params, cfg, plan=plan)
+        else:
+            record_tree_bits(telemetry, params)
         if sharder is not None:
             # extra decode room so full-attention cache lengths divide
             # the seq-shard grid (ring windows may still fall back)
@@ -193,20 +200,46 @@ class Engine:
         assert S + max_new_tokens <= self.max_seq_len, "exceeds cache budget"
         if key is None:
             key = jax.random.PRNGKey(0)
+        tel = self.telemetry
+        if tel.enabled:
+            t_start = tel.now()
         logits, caches = self._prefill(self.params, prompts)
         caches = self._place_caches(caches, B)
         # the first token goes through the same temperature/categorical
         # path as decode steps (it used to be unconditionally greedy)
         key, sub = jax.random.split(key)
         tok = self._first(logits, sub, jnp.float32(temperature))
+        if tel.enabled:
+            # host-side fence at the dispatch boundary; the jitted
+            # prefill/step programs are untouched (docs/observability.md)
+            jax.block_until_ready(tok)
+            t_tok = tel.now()
+            tel.observe("serve_prefill_seconds", t_tok - t_start)
+            tel.observe("serve_ttft_seconds", t_tok - t_start)
+            tel.inc("serve_prefills_total")
+            tel.inc("serve_tokens_total", B)
+            tel.span("prefill", t_start, t_tok, step=0,
+                     slot=-1, prompt_len=S, padded_len=S)
         done = (tok == self.eos_id) if self.eos_id is not None else jnp.zeros((B,), bool)
         out = [tok]
         for t in range(1, max_new_tokens):
             key, sub = jax.random.split(key)
+            if tel.enabled:
+                t0 = tel.now()
             tok, caches, done = self._step(
                 self.params, tok, caches, jnp.int32(S + t - 1), sub,
                 jnp.float32(temperature), done,
             )
+            if tel.enabled:
+                jax.block_until_ready(tok)
+                t1 = tel.now()
+                tel.observe("serve_decode_step_seconds", t1 - t0)
+                tel.observe("serve_itl_seconds", t1 - t_tok)
+                t_tok = t1
+                tel.inc("serve_decode_steps_total")
+                tel.inc("serve_tokens_total", B)
+                tel.span("decode_step", t0, t1, step=t, n_active=B,
+                         batch_fill=1.0)
             out.append(tok)
             if self.eos_id is not None and bool(jnp.all(done)):
                 break

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serving.telemetry import NOOP
 
 
 def _is_pos_leaf(path) -> bool:
@@ -83,10 +84,11 @@ class SlotKVCache:
     """Fixed pool of `num_slots` decode slots over per-slot caches."""
 
     def __init__(self, cfg, num_slots: int, cache_len: int, dtype=jnp.bfloat16,
-                 *, sharder=None):
+                 *, sharder=None, telemetry=NOOP):
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_len = cache_len
+        self.telemetry = telemetry
         self.caches = lm.init_caches(cfg, num_slots, cache_len, dtype,
                                      per_slot=True)
         if sharder is not None and sharder.mesh is not None \
@@ -98,6 +100,8 @@ class SlotKVCache:
         self.active = np.zeros(num_slots, dtype=bool)
         # absolute position of the NEXT token fed to each slot (-1 = idle)
         self.next_pos = np.full(num_slots, -1, dtype=np.int64)
+        if telemetry.enabled:
+            self.record_footprint()
 
     # -- host-side bookkeeping -------------------------------------------
     @property
@@ -114,6 +118,8 @@ class SlotKVCache:
         slot = self._free.pop()
         assert not self.active[slot], f"slot {slot} double-alloc"
         self.active[slot] = True
+        if self.telemetry.enabled:
+            self.telemetry.set_gauge("serve_slots_active", self.n_active)
         return slot
 
     def free(self, slot: int) -> None:
@@ -121,6 +127,8 @@ class SlotKVCache:
         self.active[slot] = False
         self.next_pos[slot] = -1
         self._free.append(slot)
+        if self.telemetry.enabled:
+            self.telemetry.set_gauge("serve_slots_active", self.n_active)
 
     # -- device-side cache ops -------------------------------------------
     def install_prefill(self, slot: int, new_caches, prompt_len: int) -> None:
@@ -152,24 +160,57 @@ class SlotKVCache:
         ``per_device`` sums each leaf's addressable-shard bytes: equal to
         ``total`` single-device, ``total / (batch×seq shards)`` on a mesh
         — the number that decides how many slots / how much context one
-        chip's HBM actually holds."""
+        chip's HBM actually holds.
+
+        ``logical`` is the PRE-QUANTIZATION bf16-equivalent bytes of the
+        same cached values (2 bytes per logical K/V element; packed code
+        words expand by codes-per-word, scales contribute nothing), and
+        ``compression`` = logical/total — the one place the compression
+        ratio is computed (serve_bench, the kv_pool_* gauges, and the
+        docs tables all read it from here)."""
+        from repro.core.packing import codes_per_word
+
         kv_keys = {"k", "v", "k_packed", "k_scales", "v_packed", "v_scales"}
+        kv_bits = getattr(self.cfg, "kv_bits", 16) or 16
         total = 0
         per_device = 0
+        logical = 0
         for path, leaf in jax.tree_util.tree_leaves_with_path(self.caches):
-            if any(getattr(k, "key", None) in kv_keys for k in path):
-                total += leaf.size * leaf.dtype.itemsize
-                sharding = getattr(leaf, "sharding", None)
-                if sharding is not None:
-                    per_device += (
-                        math.prod(sharding.shard_shape(leaf.shape))
-                        * leaf.dtype.itemsize
-                    )
-                else:
-                    per_device += leaf.size * leaf.dtype.itemsize
+            key = next((getattr(k, "key", None) for k in path
+                        if getattr(k, "key", None) in kv_keys), None)
+            if key is None:
+                continue
+            total += leaf.size * leaf.dtype.itemsize
+            if key in ("k", "v"):
+                logical += leaf.size * 2
+            elif key in ("k_packed", "v_packed"):
+                logical += leaf.size * codes_per_word(kv_bits) * 2
+            sharding = getattr(leaf, "sharding", None)
+            if sharding is not None:
+                per_device += (
+                    math.prod(sharding.shard_shape(leaf.shape))
+                    * leaf.dtype.itemsize
+                )
+            else:
+                per_device += leaf.size * leaf.dtype.itemsize
         return {
             "total": total,
             "per_device": per_device,
+            "logical": logical,
+            "compression": logical / max(total, 1),
             "per_slot": total / max(self.num_slots, 1),
             "per_token": total / max(self.num_slots * self.cache_len, 1),
         }
+
+    def record_footprint(self) -> None:
+        """Export kv_bytes() + slot occupancy as gauges (bytes are
+        kind-labelled) — called at construction and re-callable after
+        re-placement or a registry reset (serve_bench's warm pass)."""
+        kvb = self.kv_bytes()
+        t = self.telemetry
+        t.set_gauge("kv_pool_bytes", kvb["total"], kind="packed")
+        t.set_gauge("kv_pool_bytes", kvb["logical"], kind="logical")
+        t.set_gauge("kv_pool_bytes", kvb["per_device"], kind="per_device")
+        t.set_gauge("kv_pool_compression_x", kvb["compression"])
+        t.set_gauge("serve_slots_total", self.num_slots)
+        t.set_gauge("serve_slots_active", self.n_active)

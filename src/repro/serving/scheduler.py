@@ -14,6 +14,12 @@ Admission is strict FIFO over *arrived* requests: a request with a later
 arrival_time never jumps an earlier one, even if the earlier one has not
 arrived yet — i.e. the queue models a real ingress order, and bursty
 traffic simply makes the head available sooner (docs/serving.md).
+
+A ``telemetry=`` recorder (serving/telemetry.py; defaults to the no-op)
+turns the bookkeeping into observable gauges: queue depth and running
+count on every submit/bind/retire, plus a queue-wait histogram in
+virtual steps — the instrument the ROADMAP's SLA scheduler gates on
+(docs/observability.md).
 """
 
 from __future__ import annotations
@@ -21,6 +27,8 @@ from __future__ import annotations
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
+
+from repro.serving.telemetry import NOOP
 
 
 QUEUED, RUNNING, FINISHED = "QUEUED", "RUNNING", "FINISHED"
@@ -47,6 +55,10 @@ class Request:
     tokens: list = field(default_factory=list)
     admitted_at: float | None = None
     finished_at: float | None = None
+    # wall-clock telemetry marks (host perf_counter; None until recorded)
+    t_submit: float | None = None
+    t_first_token: float | None = None
+    t_last_token: float | None = None
 
     def __post_init__(self):
         if self.max_new < 1:
@@ -54,16 +66,24 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, *, eos_id: int | None = None):
+    def __init__(self, *, eos_id: int | None = None, telemetry=NOOP):
         self.eos_id = eos_id
+        self.telemetry = telemetry
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}   # slot -> request
         self.finished: list[Request] = []
+
+    def _gauges(self) -> None:
+        self.telemetry.set_gauge("serve_queue_depth", len(self.queue))
+        self.telemetry.set_gauge("serve_requests_running", len(self.running))
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> Request:
         assert req.state == QUEUED
         self.queue.append(req)
+        if self.telemetry.enabled:
+            self.telemetry.inc("serve_requests_submitted_total")
+            self._gauges()
         return req
 
     def next_admissible(self, now: float) -> Request | None:
@@ -83,6 +103,10 @@ class Scheduler:
         req.slot = slot
         req.admitted_at = now
         self.running[slot] = req
+        if self.telemetry.enabled:
+            self.telemetry.observe("serve_queue_wait_steps",
+                                   max(0.0, now - req.arrival_time))
+            self._gauges()
 
     # -- retirement --------------------------------------------------------
     def should_retire(self, req: Request) -> bool:
@@ -97,6 +121,9 @@ class Scheduler:
         req.slot = None
         req.finished_at = now
         self.finished.append(req)
+        if self.telemetry.enabled:
+            self.telemetry.inc("serve_requests_retired_total")
+            self._gauges()
         return req
 
     # -- introspection -----------------------------------------------------

@@ -29,6 +29,16 @@ Works unchanged for quantized param trees: the decode/prefill fns are
 the same lm.py entry points the static Engine uses, and quantization is
 invisible above the in-layer dequant.
 
+Passing ``telemetry=`` (serving/telemetry.py; defaults to the shared
+no-op) turns the whole request lifecycle into spans and metrics:
+submit -> queue-wait -> prefill -> per-step decode -> retire, with TTFT
+and inter-token-latency histograms, queue/occupancy gauges, batch-fill
+and padding-waste distributions, and quantization-health gauges.  All
+instrumentation is host-side at the dispatch boundary (an explicit
+``block_until_ready`` fence after the jitted call) — the compiled
+programs are identical with telemetry on or off, so greedy outputs stay
+token-identical (docs/observability.md, tests/test_telemetry.py).
+
 The KV cache itself can be k-bit too (cfg.kv_bits in {4, 8}, e.g.
 ``cfg.with_kv_quant(4)``): pool leaves become packed codes + per-block
 scales, each decode step append-quantizes the new token inside the same
@@ -54,6 +64,12 @@ from repro.models.sharding import check_decode_capability
 from repro.serving.engine import sample_token
 from repro.serving.kvcache import SlotKVCache, scatter_row
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.telemetry import (
+    NOOP,
+    kv_roundtrip_error,
+    record_quant_health,
+    record_tree_bits,
+)
 
 
 def bucket_len(n: int, *, minimum: int = 8, cap: int | None = None) -> int:
@@ -83,17 +99,24 @@ class Server:
     def __init__(self, params, cfg, *, num_slots: int, max_seq_len: int,
                  eos_id: int | None = None, seed: int = 0,
                  dtype=jnp.bfloat16, plan=None,
-                 matmul_mode: str | None = None, sharder=None):
+                 matmul_mode: str | None = None, sharder=None,
+                 telemetry=NOOP):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
         check_decode_capability(
             cfg, sharder,
             caller="the continuous-batching Server (serving/server.py)",
         )
+        self.telemetry = telemetry
         if plan is not None:
             from repro.models.quantize import quantize_tree
 
+            # load-time quantization health: per-matrix bits + blockwise
+            # qerr, measured on the raw tree before it is consumed
+            record_quant_health(telemetry, params, cfg, plan=plan)
             params = quantize_tree(params, cfg, plan=plan)
+        else:
+            record_tree_bits(telemetry, params)
         if sharder is not None:
             # extra decode room so full-attention cache lengths divide
             # the seq-shard grid (ring windows may still fall back)
@@ -104,8 +127,8 @@ class Server:
         self.sharder = sharder
         self.kvq = kv_spec(cfg)  # None = bf16 cache; else packed k-bit
         self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype,
-                                sharder=sharder)
-        self.scheduler = Scheduler(eos_id=eos_id)
+                                sharder=sharder, telemetry=telemetry)
+        self.scheduler = Scheduler(eos_id=eos_id, telemetry=telemetry)
         self._key = jax.random.PRNGKey(seed)
         self._bucketed = _bucketing_safe(cfg)
         self._cur_tok = np.zeros(num_slots, dtype=np.int64)
@@ -153,6 +176,50 @@ class Server:
 
         self._step = jax.jit(step, donate_argnums=(2,))
 
+        # append-quantize health probe (telemetry.kv_probe_every > 0 and a
+        # quantized cache): a SEPARATE bf16-cache prefill jit whose K/V
+        # rows are round-tripped through the spec's encode/dequant on the
+        # host — the serving jits above are untouched.
+        self._probe = None
+        self._n_admitted = 0
+        if (telemetry.enabled and telemetry.kv_probe_every > 0
+                and self.kvq is not None):
+            cfg16 = cfg.with_kv_quant(16)
+
+            def probe_caches(params, prompt):
+                with tp_scope():
+                    _, caches, _ = lm.backbone_seq(
+                        params, prompt, cfg16, constrain=constrain,
+                        q_pad=q_pad, write_cache=True, cache_len=max_seq_len,
+                    )
+                return caches
+
+            self._probe = jax.jit(probe_caches)
+            self._kv_err_sum = 0.0
+            self._kv_err_n = 0
+
+    def _probe_kv_error(self, padded, length: int) -> None:
+        """Measure the append-quantize roundtrip error on this prompt's
+        actual K/V rows (bf16 reference prefill -> encode_rows ->
+        dequant) and fold it into the cumulative gauges."""
+        caches = self._probe(self.params, padded)
+        tel = self.telemetry
+        for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+            if not any(getattr(k, "key", None) in ("k", "v") for k in path):
+                continue
+            rows = leaf[:, 0, : min(length, leaf.shape[2])]
+            feat = rows.shape[-2] * rows.shape[-1]
+            rows = rows.reshape(-1, feat)
+            err = kv_roundtrip_error(rows, self.kvq)
+            self._kv_err_sum += err
+            self._kv_err_n += 1
+            tel.inc("kv_probe_rows_total", rows.shape[0])
+            g = tel.registry.gauge("kv_append_qerr_max")
+            if err > g.value:
+                g.set(err)
+        tel.set_gauge("kv_append_qerr_rms",
+                      self._kv_err_sum / max(self._kv_err_n, 1))
+
     # -- API ---------------------------------------------------------------
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
                arrival_time: float = 0.0, on_token=None) -> int:
@@ -166,6 +233,12 @@ class Server:
             )
         req = Request(prompt=prompt, max_new=max_new, temperature=temperature,
                       arrival_time=arrival_time, on_token=on_token)
+        tel = self.telemetry
+        if tel.enabled:
+            req.t_submit = tel.now()
+            tel.event("submit", req.t_submit, request_id=req.id,
+                      step=self.steps, prompt_len=len(prompt),
+                      max_new=max_new, arrival_time=arrival_time)
         self.scheduler.submit(req)
         return req.id
 
@@ -195,11 +268,34 @@ class Server:
     def _emit(self, req, tok: int) -> None:
         req.tokens.append(tok)
         self.tokens_out += 1
+        tel = self.telemetry
+        if tel.enabled:
+            now = tel.now()
+            tel.inc("serve_tokens_total")
+            if req.t_first_token is None:
+                req.t_first_token = now
+                if req.t_submit is not None:
+                    tel.observe("serve_ttft_seconds", now - req.t_submit)
+                tel.event("token", now, request_id=req.id, step=self.steps,
+                          first=True)
+            elif req.t_last_token is not None:
+                tel.observe("serve_itl_seconds", now - req.t_last_token)
+            req.t_last_token = now
         if req.on_token is not None:
             req.on_token(req.id, tok)
 
+    def _retire(self, req, slot: int, reason: str) -> None:
+        self.scheduler.retire(slot, self.steps)
+        self.pool.free(slot)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.event("retire", tel.now(), request_id=req.id,
+                      step=self.steps, n_tokens=len(req.tokens),
+                      reason=reason)
+
     def _admit(self) -> int:
         produced = 0
+        tel = self.telemetry
         while self.pool.n_free:
             req = self.scheduler.next_admissible(self.steps)
             if req is None:
@@ -212,20 +308,42 @@ class Server:
             padded = np.zeros((1, Sb), dtype=np.int64)
             padded[0, :L] = req.prompt
             self._key, sub = jax.random.split(self._key)
+            if tel.enabled:
+                t0 = tel.now()
+                if req.t_submit is not None:
+                    tel.span("queue_wait", req.t_submit, t0,
+                             request_id=req.id, step=self.steps,
+                             steps=float(self.steps - req.arrival_time))
             tok, new_pool = self._prefill(
                 self.params, self.pool.caches, jnp.asarray(padded),
                 jnp.int32(L), jnp.int32(slot), sub,
                 jnp.float32(req.temperature),
             )
             self.pool.install_prefill(slot, new_pool, L)
-            t0 = int(tok[0])
-            self._emit(req, t0)
+            if tel.enabled:
+                # fence at the dispatch boundary: host-side timing only,
+                # the compiled prefill is untouched
+                jax.block_until_ready(tok)
+                t1 = tel.now()
+                tel.observe("serve_prefill_seconds", t1 - t0)
+                tel.observe("serve_prefill_pad_frac", (Sb - L) / Sb)
+                tel.inc("serve_prefills_total")
+                tel.span("prefill", t0, t1, request_id=req.id,
+                         step=self.steps, slot=slot, prompt_len=L,
+                         padded_len=Sb)
+                self._n_admitted += 1
+                if (self._probe is not None
+                        and (self._n_admitted - 1) % tel.kv_probe_every == 0):
+                    self._probe_kv_error(jnp.asarray(padded), L)
+            first = int(tok[0])
+            self._emit(req, first)
             produced += 1
             if self.scheduler.should_retire(req):
-                self.scheduler.retire(slot, self.steps)
-                self.pool.free(slot)
+                self._retire(req, slot,
+                             "budget" if len(req.tokens) >= req.max_new
+                             else "eos")
             else:
-                self._cur_tok[slot] = t0
+                self._cur_tok[slot] = first
                 self._temps[slot] = req.temperature
         return produced
 
@@ -236,9 +354,25 @@ class Server:
         temps = jnp.asarray(np.where(self.pool.active, self._temps, 0.0),
                             jnp.float32)
         self._key, sub = jax.random.split(self._key)
+        tel = self.telemetry
+        if tel.enabled:
+            n_active = self.pool.n_active
+            t0 = tel.now()
         nxt, self.pool.caches = self._step(
             self.params, tok, self.pool.caches, pos, sub, temps,
         )
+        if tel.enabled:
+            # fence at the dispatch boundary (the np.asarray below would
+            # sync anyway; the explicit fence makes the timed quantity
+            # "dispatch to completion", never a lazy transfer)
+            jax.block_until_ready(nxt)
+            t1 = tel.now()
+            fill = n_active / self.pool.num_slots
+            tel.observe("serve_decode_step_seconds", t1 - t0)
+            tel.observe("serve_batch_fill", fill)
+            tel.inc("serve_decode_steps_total")
+            tel.span("decode_step", t0, t1, step=self.steps,
+                     n_active=n_active, batch_fill=fill)
         nxt = np.asarray(nxt)
         produced = 0
         for slot, req in list(self.scheduler.running.items()):
@@ -246,9 +380,12 @@ class Server:
             self._emit(req, t)
             produced += 1
             self.pool.advance(slot)
-            if self.scheduler.should_retire(req) or self.pool.room(slot) <= 0:
-                self.scheduler.retire(slot, self.steps)
-                self.pool.free(slot)
+            if self.scheduler.should_retire(req):
+                self._retire(req, slot,
+                             "budget" if len(req.tokens) >= req.max_new
+                             else "eos")
+            elif self.pool.room(slot) <= 0:
+                self._retire(req, slot, "cache_full")
             else:
                 self._cur_tok[slot] = t
         return produced

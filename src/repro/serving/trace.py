@@ -1,0 +1,227 @@
+"""Per-request span tracing for the serving stack: JSONL event logs +
+schema validation.
+
+One trace event per line; the schema (version ``TRACE_VERSION``) is the
+contract between the Server/Engine instrumentation, the CI smoke that
+validates a live serve's trace, and any downstream consumer (the
+ROADMAP's SLA scheduler reads the same lifecycle):
+
+    {"v": 1, "kind": "span" | "event", "name": <str>,
+     "request_id": <int | null>, "t0": <float>, "t1": <float | null>,
+     "step": <int | null>, "attrs": {<str>: <json>}}
+
+* ``kind: "span"`` has both ``t0`` and ``t1`` (host perf_counter
+  seconds, t1 >= t0); ``kind: "event"`` has ``t0`` only (t1 null).
+* ``request_id`` ties an event to one request; batched engine work
+  (decode steps) carries null — its per-request effect shows up in the
+  per-request token events.
+* ``step`` is the server's VIRTUAL clock (engine steps), the unit
+  arrival times and queue waits are expressed in; wall-clock timing
+  lives in t0/t1.
+
+Request lifecycle names (docs/observability.md#span-schema):
+
+    submit       event  — request accepted into the queue
+    queue_wait   span   — submit to admission; attrs.steps = virtual wait
+    prefill      span   — admission prefill dispatch to fence;
+                          attrs: slot, prompt_len, padded_len (the
+                          static Engine's batched prefill carries a
+                          null request_id)
+    token        event  — one emitted token; attrs.first marks the TTFT
+                          edge (only first/last tokens are traced by
+                          default — the full ITL distribution lives in
+                          the serve_itl_seconds histogram)
+    decode_step  span   — one batched decode step; request_id null;
+                          attrs: n_active, batch_fill
+    retire       event  — request finished; attrs: n_tokens, reason
+
+``validate_events`` checks structure AND lifecycle ordering per request
+(exactly one submit, retire after submit, prefill inside the window).
+Run as a module to validate a written trace (the CI telemetry smoke):
+
+    PYTHONPATH=src python -m repro.serving.trace artifacts/trace.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+TRACE_VERSION = 1
+
+SPAN_NAMES = {"queue_wait", "prefill", "decode_step"}
+EVENT_NAMES = {"submit", "token", "retire"}
+
+_REQUIRED_KEYS = {"v", "kind", "name", "request_id", "t0", "t1", "step",
+                  "attrs"}
+
+
+class Tracer:
+    """Append-only in-memory event log with JSONL export.  ``max_events``
+    bounds memory on long serves by dropping the OLDEST events (the
+    trace is a flight recorder; metrics aggregates never drop)."""
+
+    def __init__(self, max_events: int | None = None):
+        self.events: list[dict] = []
+        self.max_events = max_events
+        self.dropped = 0
+
+    def reset(self) -> None:
+        self.events.clear()
+        self.dropped = 0
+
+    def _push(self, ev: dict) -> None:
+        self.events.append(ev)
+        if self.max_events is not None and len(self.events) > self.max_events:
+            del self.events[0]
+            self.dropped += 1
+
+    def span(self, name: str, t0: float, t1: float, *, request_id=None,
+             step=None, **attrs) -> None:
+        self._push({
+            "v": TRACE_VERSION, "kind": "span", "name": name,
+            "request_id": request_id, "t0": float(t0), "t1": float(t1),
+            "step": None if step is None else int(step), "attrs": attrs,
+        })
+
+    def event(self, name: str, t: float, *, request_id=None, step=None,
+              **attrs) -> None:
+        self._push({
+            "v": TRACE_VERSION, "kind": "event", "name": name,
+            "request_id": request_id, "t0": float(t), "t1": None,
+            "step": None if step is None else int(step), "attrs": attrs,
+        })
+
+    def write_jsonl(self, path) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with open(p, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+        return p
+
+
+# ---------------------------------------------------------------------------
+# validation (structure + per-request lifecycle)
+# ---------------------------------------------------------------------------
+
+def _fail(i: int, msg: str) -> None:
+    raise ValueError(f"trace event {i}: {msg}")
+
+
+def validate_events(events) -> dict:
+    """Validate a sequence of trace-event dicts against the schema and
+    the request lifecycle.  Returns summary stats ({'events', 'requests',
+    'spans', 'decode_steps'}); raises ValueError with the offending event
+    index on the first violation."""
+    events = list(events)
+    by_req: dict[int, dict] = {}
+    n_spans = n_steps = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            _fail(i, f"not an object: {type(ev).__name__}")
+        missing = _REQUIRED_KEYS - set(ev)
+        if missing:
+            _fail(i, f"missing keys {sorted(missing)}")
+        if ev["v"] != TRACE_VERSION:
+            _fail(i, f"schema version {ev['v']!r} (this build reads "
+                     f"{TRACE_VERSION})")
+        kind, name = ev["kind"], ev["name"]
+        if kind == "span":
+            if name not in SPAN_NAMES:
+                _fail(i, f"unknown span name {name!r}")
+            if not isinstance(ev["t1"], (int, float)):
+                _fail(i, f"span {name!r} needs numeric t1")
+            if ev["t1"] < ev["t0"]:
+                _fail(i, f"span {name!r} ends before it starts "
+                         f"({ev['t1']} < {ev['t0']})")
+            n_spans += 1
+        elif kind == "event":
+            if name not in EVENT_NAMES:
+                _fail(i, f"unknown event name {name!r}")
+            if ev["t1"] is not None:
+                _fail(i, f"event {name!r} must have t1 null")
+        else:
+            _fail(i, f"unknown kind {kind!r}")
+        if not isinstance(ev["t0"], (int, float)):
+            _fail(i, f"{name!r} needs numeric t0")
+        if not isinstance(ev["attrs"], dict):
+            _fail(i, f"{name!r} attrs must be an object")
+        rid = ev["request_id"]
+        if name == "decode_step":
+            if rid is not None:
+                _fail(i, "decode_step is batched; request_id must be null")
+            if not (0 <= ev["attrs"].get("n_active", -1)):
+                _fail(i, "decode_step needs attrs.n_active >= 0")
+            n_steps += 1
+            continue
+        if name == "prefill" and rid is None:
+            continue  # static Engine: one batched prefill, no request
+        if rid is None:
+            _fail(i, f"{name!r} needs a request_id")
+        r = by_req.setdefault(rid, {"submit": None, "retire": None,
+                                    "prefill": None, "tokens": 0})
+        if name == "submit":
+            if r["submit"] is not None:
+                _fail(i, f"request {rid}: duplicate submit")
+            r["submit"] = ev["t0"]
+        elif name == "retire":
+            if r["retire"] is not None:
+                _fail(i, f"request {rid}: duplicate retire")
+            if r["submit"] is None:
+                _fail(i, f"request {rid}: retire before submit")
+            if ev["t0"] < r["submit"]:
+                _fail(i, f"request {rid}: retire at {ev['t0']} precedes "
+                         f"submit at {r['submit']}")
+            r["retire"] = ev["t0"]
+        else:
+            if r["submit"] is None:
+                _fail(i, f"request {rid}: {name!r} before submit")
+            if r["retire"] is not None:
+                _fail(i, f"request {rid}: {name!r} after retire")
+            if name == "prefill":
+                r["prefill"] = ev["t0"]
+            elif name == "token":
+                r["tokens"] += 1
+    for rid, r in by_req.items():
+        if r["retire"] is not None and r["prefill"] is None:
+            raise ValueError(f"request {rid}: retired without a prefill span")
+    return {"events": len(events), "requests": len(by_req),
+            "spans": n_spans, "decode_steps": n_steps}
+
+
+def validate_jsonl(path) -> dict:
+    """Parse + validate a JSONL trace file; returns validate_events'
+    summary plus the path."""
+    events = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{ln}: not valid JSON: {e}") from e
+    stats = validate_events(events)
+    stats["path"] = str(path)
+    return stats
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="validate a serving trace JSONL against the span schema"
+    )
+    ap.add_argument("trace", help="path to a --trace-out JSONL file")
+    args = ap.parse_args(argv)
+    stats = validate_jsonl(args.trace)
+    print(f"ok: {stats['events']} events, {stats['requests']} requests, "
+          f"{stats['spans']} spans ({stats['decode_steps']} decode steps) "
+          f"in {stats['path']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,6 +46,13 @@ def _args(*argv):
     (("--mode", "static", "--stream"), "static"),
     (("--mode", "continuous", "--batch", "4"), "static-mode"),
     (("--mode", "continuous", "--prompt-len", "16"), "static-mode"),
+    # kv probe needs a quantized cache, a telemetry sink, continuous mode
+    (("--kv-probe-every", "2", "--metrics-out", "m.prom"), "bf16 cache"),
+    (("--kv-bits", "4", "--kv-probe-every", "2"), "telemetry sink"),
+    (("--kv-bits", "4", "--kv-probe-every", "0", "--metrics-out",
+      "m.prom"), "positive"),
+    (("--mode", "static", "--kv-bits", "4", "--kv-probe-every", "2",
+      "--metrics-out", "m.prom"), "continuous-mode"),
 ])
 def test_conflicting_flags_rejected(argv, needle):
     with pytest.raises(SystemExit, match=needle):
@@ -67,6 +74,9 @@ def test_mesh_flag_validated():
     ("--dtype", "fp16",),
     ("--mode", "static", "--batch", "2", "--prompt-len", "8"),
     ("--mode", "continuous", "--num-slots", "2", "--rate", "1.0"),
+    ("--kv-bits", "4", "--kv-probe-every", "2", "--metrics-out", "m.prom",
+     "--trace-out", "t.jsonl"),
+    ("--mode", "static", "--metrics-out", "m.prom"),
 ])
 def test_legal_flag_combinations_validate(argv):
     serve_mod.validate_flags(_args(*argv))
