@@ -58,6 +58,14 @@ comparison is skipped under a mesh (the parity suite
 tests/test_sharded_serving.py pins Engine==Server there).  Pick an arch
 whose head count divides the model axis (tiny-650k on 2x4).
 
+``--sla`` switches to the scheduler bench (run_sla): FIFO vs SLA-aware
+scheduling (priority classes + chunked prefill + preemption with
+quantized spill) on the two-class bursty trace
+(data/synthetic.two_class_workload), reporting per-class p50/p99 TTFT
+and inter-token latency and gating the ISSUE 7 acceptance numbers:
+hi-class p99 TTFT >= 2x better at tok/s within 10% of FIFO, spilled
+bytes packed (~kv_bits/16 of bf16), outputs token-identical.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --kv-bits 4
     PYTHONPATH=src python benchmarks/serve_bench.py --matmul-mode dequant_einsum
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -145,6 +153,186 @@ def _latency_columns(tel) -> tuple[dict, str]:
                 else float("nan")
     derived = ";".join(f"{k}={v:.2f}" for k, v in cols.items())
     return cols, derived
+
+
+def _class_latency(reqs, marks) -> dict:
+    """Per-priority-class p50/p99 TTFT and mean-ITL percentiles (ms) off
+    the per-Request wall-clock telemetry marks of one timed pass."""
+    out = {}
+    for cls in sorted({r["priority"] for r in reqs}):
+        idx = [i for i, r in enumerate(reqs) if r["priority"] == cls]
+        ttft = [marks[i].t_first_token - marks[i].t_submit for i in idx]
+        itl = [
+            (marks[i].t_last_token - marks[i].t_first_token)
+            / (len(marks[i].tokens) - 1)
+            for i in idx if len(marks[i].tokens) > 1
+        ]
+        out[cls] = {
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+            "itl_p50_ms": float(np.percentile(itl, 50) * 1e3)
+            if itl else float("nan"),
+            "itl_p99_ms": float(np.percentile(itl, 99) * 1e3)
+            if itl else float("nan"),
+        }
+    return out
+
+
+def run_sla(log=print, *, arch="tiny-160k", num_slots=4, n_requests=24,
+            kv_bits=4, prefill_chunk=16, max_preemptions=2, seed=0,
+            json_out=None):
+    """FIFO vs SLA-aware scheduling on the two-class bursty trace
+    (data/synthetic.two_class_workload): a burst of long low-priority
+    requests fills the pool, short high-priority requests trickle in
+    behind it.  Both policies serve the SAME trace through the same
+    jitted steps; greedy outputs are verified token-identical per
+    request before any number is reported (scheduling, chunked prefill
+    and preemption are pure host-side policy).  Gates (ISSUE 7):
+
+    * hi-class p99 TTFT improves >= 2x under SLA scheduling,
+    * total throughput stays within 10% of FIFO,
+    * spilled preemption bytes are packed — bytes_packed/bytes_logical
+      tracks kv_bits/16 (codes + scales as stored, never dequantized).
+
+    Wall-clock latencies are REPORTED (per-class p50/p99 TTFT/ITL off
+    the request marks) but the gates are asserted on the VIRTUAL clock
+    — tokens per engine step and admission-wait steps are deterministic
+    functions of the policy, so the gates cannot flake on a noisy
+    shared-CPU runner while still measuring exactly the scheduling
+    overhead (extra chunk steps, preemption stragglers, batch fill).
+    """
+    cfg = get_arch(arch)
+    if kv_bits < 16:
+        cfg = cfg.with_kv_quant(kv_bits)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = synthetic.two_class_workload(cfg.vocab_size, n_requests,
+                                        seed=seed)
+    max_seq_len = max(len(r["prompt"]) + r["max_new"] for r in reqs)
+    n_hi = sum(r["priority"] == 0 for r in reqs)
+    log(f"  {n_requests} requests ({n_hi} hi-priority), {num_slots} "
+        f"slots, kv{kv_bits}, prefill_chunk={prefill_chunk}, "
+        f"max_preemptions={max_preemptions}")
+
+    def _serve(sla: bool):
+        tel = Telemetry()
+        srv = Server(params, cfg, num_slots=num_slots,
+                     max_seq_len=max_seq_len, telemetry=tel,
+                     prefill_chunk=prefill_chunk if sla else None,
+                     max_preemptions=max_preemptions if sla else 0)
+
+        def _pass():
+            tel.reset()
+            srv.pool.record_footprint()
+            clock0 = srv.steps
+            t0 = time.perf_counter()
+            ids = [srv.submit(r["prompt"], r["max_new"],
+                              arrival_time=clock0 + r["arrival_time"],
+                              priority=r["priority"] if sla else 0)
+                   for r in reqs]
+            res = srv.run_until_drained()
+            dt = time.perf_counter() - t0
+            fin = {q.id: q for q in srv.scheduler.finished}
+            return ({i: res[rid] for i, rid in enumerate(ids)}, dt,
+                    {i: fin[rid] for i, rid in enumerate(ids)},
+                    srv.steps - clock0)
+
+        outs, dt, marks, vsteps = common.compile_warm(_pass)
+        # Best-of-3 timed passes for the REPORTED wall numbers (OS
+        # scheduling only ever adds time — common.timed_robust's
+        # rationale); the serve itself is deterministic, so the virtual
+        # step count and marks are identical every pass.
+        for _ in range(2):
+            o2, d2, m2, v2 = _pass()
+            assert o2 == outs and v2 == vsteps, \
+                "serve is not deterministic across passes"
+            if d2 < dt:
+                dt, marks = d2, m2
+        return outs, dt, marks, vsteps, tel, srv
+
+    out_f, dt_f, marks_f, v_f, _, _ = _serve(sla=False)
+    out_s, dt_s, marks_s, v_s, tel_s, srv_s = _serve(sla=True)
+    mism = [i for i in range(n_requests) if out_f[i] != out_s[i]]
+    if mism:
+        raise AssertionError(
+            f"greedy outputs diverge between FIFO and SLA scheduling for "
+            f"requests {mism[:5]} — policy leaked into the math"
+        )
+
+    toks = sum(len(t) for t in out_f.values())
+    tps_f, tps_s = toks / dt_f, toks / dt_s
+    lat_f, lat_s = _class_latency(reqs, marks_f), _class_latency(reqs, marks_s)
+    # per-trace counters come from the telemetry of the LAST pass (the
+    # scheduler's own n_preemptions accumulates across warmup passes)
+    n_pre = int(tel_s.registry.counter("serve_preemptions_total").value)
+    rows, stats = [], {"tok_s_fifo": tps_f, "tok_s_sla": tps_s,
+                       "kv_bits": kv_bits, "n_preemptions": n_pre}
+    for label, lat, tps in (("fifo", lat_f, tps_f), ("sla", lat_s, tps_s)):
+        for cls, c in lat.items():
+            name = "hi" if cls == 0 else "lo"
+            log(f"  {label:4s} {name}: ttft p50 {c['ttft_p50_ms']:7.1f}ms "
+                f"p99 {c['ttft_p99_ms']:7.1f}ms  itl p50 "
+                f"{c['itl_p50_ms']:6.2f}ms p99 {c['itl_p99_ms']:6.2f}ms")
+            rows.append((f"serve/{label}_{name}", c["ttft_p99_ms"] * 1e3,
+                         ";".join(f"{k}={v:.2f}" for k, v in c.items())
+                         + f";tok_s={tps:.1f}"))
+            stats.update({f"{label}_{name}_{k}": v for k, v in c.items()})
+
+    speedup = lat_f[0]["ttft_p99_ms"] / lat_s[0]["ttft_p99_ms"]
+
+    # -- deterministic gates on the virtual clock ----------------------
+    def _hi_wait_p99(marks):
+        waits = [marks[i].admitted_at - marks[i].arrival_time
+                 for i, r in enumerate(reqs) if r["priority"] == 0]
+        return float(np.percentile(waits, 99))
+
+    wait_f, wait_s = _hi_wait_p99(marks_f), _hi_wait_p99(marks_s)
+    log(f"  hi-priority p99 ttft {speedup:.2f}x better under SLA "
+        f"(virtual: {wait_f:.1f} -> {wait_s:.1f} admission-wait steps; "
+        f"{n_pre} preemptions, tok/s "
+        f"{tps_s / tps_f:.2f}x wall, {v_f / v_s:.2f}x virtual; "
+        f"outputs token-identical)")
+    assert n_pre >= 1, \
+        "the two-class trace never triggered a preemption"
+    assert wait_s * 2.0 <= wait_f, (
+        f"hi-class p99 admission wait only improved "
+        f"{wait_f:.1f} -> {wait_s:.1f} steps, gate wants 2x"
+    )
+    assert v_s <= v_f / 0.9, (
+        f"SLA used {v_s} engine steps for the trace vs FIFO's {v_f} — "
+        f"virtual throughput fell more than 10%"
+    )
+    packed = tel_s.registry.counter("kv_spill_bytes_total",
+                                    kind="packed").value
+    logical = tel_s.registry.counter("kv_spill_bytes_total",
+                                     kind="logical").value
+    if kv_bits < 16:
+        ratio = packed / max(logical, 1)
+        log(f"  spilled {packed/1e3:.1f} kB packed of "
+            f"{logical/1e3:.1f} kB bf16-equivalent ({ratio:.3f}, "
+            f"kv_bits/16 = {kv_bits/16:.3f})")
+        # packed codes are exactly kv_bits/16 of the bf16 bytes; the
+        # per-block scales ride on top (one bf16 per 64-wide block)
+        assert kv_bits / 16 <= ratio <= kv_bits / 16 * 1.25, (
+            f"spill ratio {ratio:.3f} is not packed-sized "
+            f"(expected ~{kv_bits/16:.3f})"
+        )
+        stats["spill_ratio"] = ratio
+    stats.update({"ttft_speedup_hi": speedup,
+                  "hi_wait_p99_steps_fifo": wait_f,
+                  "hi_wait_p99_steps_sla": wait_s,
+                  "vsteps_fifo": v_f, "vsteps_sla": v_s,
+                  "spill_bytes_packed": packed,
+                  "spill_bytes_logical": logical})
+    rows.append(("serve/sla_speedup", 0.0,
+                 f"x={speedup:.2f};outputs_match=1"))
+    if json_out is not None:
+        path = Path(json_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"arch": arch, "num_slots": num_slots,
+             "n_requests": n_requests, **stats}, indent=2))
+        log(f"  stats -> {path}")
+    return rows, stats
 
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
@@ -341,8 +529,15 @@ if __name__ == "__main__":
     ap.add_argument("--kv-bits", type=int, default=None, choices=[4, 8, 16],
                     help="bench one KV precision (default: sweep 16/8/4)")
     ap.add_argument("--arch", default="tiny-160k")
-    ap.add_argument("--num-slots", type=int, default=8)
-    ap.add_argument("--num-requests", type=int, default=48)
+    ap.add_argument("--num-slots", type=int, default=None,
+                    help="default: 8 (4 with --sla)")
+    ap.add_argument("--num-requests", type=int, default=None,
+                    help="default: 48 (24 with --sla)")
+    ap.add_argument("--sla", action="store_true",
+                    help="bench FIFO vs SLA-aware scheduling (priority "
+                         "classes + chunked prefill + preemption with "
+                         "quantized spill) on the two-class bursty trace "
+                         "instead of the static-vs-continuous sweep")
     ap.add_argument("--matmul-mode", default="auto",
                     choices=["auto", "fused", "dequant_einsum"],
                     help="QuantizedTensor matmul dispatch for both the "
@@ -359,7 +554,21 @@ if __name__ == "__main__":
                     help="dump the stats dict as JSON (CI uploads it "
                          "next to the other bench artifacts)")
     args = ap.parse_args()
-    run(arch=args.arch, num_slots=args.num_slots,
-        n_requests=args.num_requests, kv_bits=args.kv_bits,
-        matmul_mode=args.matmul_mode, mesh_spec=args.mesh,
-        json_out=args.json_out)
+    if args.sla:
+        if args.mesh is not None:
+            raise SystemExit("--sla is single-device (chunked prefill "
+                             "forbids a sharder); drop --mesh")
+        run_sla(arch=args.arch,
+                num_slots=args.num_slots if args.num_slots is not None
+                else 4,
+                n_requests=args.num_requests if args.num_requests is not None
+                else 24,
+                kv_bits=args.kv_bits if args.kv_bits is not None else 4,
+                json_out=args.json_out)
+    else:
+        run(arch=args.arch,
+            num_slots=args.num_slots if args.num_slots is not None else 8,
+            n_requests=args.num_requests if args.num_requests is not None
+            else 48,
+            kv_bits=args.kv_bits, matmul_mode=args.matmul_mode,
+            mesh_spec=args.mesh, json_out=args.json_out)

@@ -64,6 +64,7 @@ def serving_workload(vocab: int, n_requests: int, *,
                      prompt_lens=tuple(range(8, 33)),
                      max_new_range=(8, 48),
                      rate: float = 2.0,
+                     priorities: int = 1,
                      seed: int = 0) -> list:
     """A bursty serving trace: mixed-length Zipf-Markov prompts with
     Poisson arrivals (exponential inter-arrival gaps, `rate` requests per
@@ -76,8 +77,12 @@ def serving_workload(vocab: int, n_requests: int, *,
     retired rows idling — while the slot pool refills mid-flight
     (docs/serving.md).
 
-    Returns a list of dicts {prompt, max_new, arrival_time} sorted by
-    arrival; fully deterministic in `seed`.
+    With `priorities > 1`, each request additionally draws a uniform
+    priority class in [0, priorities) — class 0 is most urgent
+    (serving/scheduler.py).
+
+    Returns a list of dicts {prompt, max_new, arrival_time, priority}
+    sorted by arrival; fully deterministic in `seed`.
     """
     rng = np.random.default_rng(seed)
     proc = ZipfMarkov(vocab, seed=seed)
@@ -92,7 +97,53 @@ def serving_workload(vocab: int, n_requests: int, *,
             "prompt": prompt,
             "max_new": max_new,
             "arrival_time": float(arrivals[i]),
+            "priority": int(rng.integers(0, priorities)),
         })
+    return reqs
+
+
+def two_class_workload(vocab: int, n_requests: int, *,
+                       hi_frac: float = 0.25,
+                       span: float = 24.0,
+                       seed: int = 0) -> list:
+    """The SLA-scheduler stress trace: a burst of LONG low-priority
+    requests (class 1: long prompts, big decode budgets, all arriving at
+    t~0 so they immediately fill the slot pool) plus a steady trickle of
+    SHORT high-priority requests (class 0: short prompts, small budgets,
+    arriving uniformly over `span` engine steps — each one lands while
+    the pool is busy with background work).  Under FIFO the hi-class
+    TTFT tail is dominated by the background burst; with priority
+    classes + preemption the scheduler should cut the hi-class p99 TTFT
+    by >= 2x at roughly equal total throughput (benchmarks/
+    serve_bench.run_sla, ISSUE 7).
+
+    Returns dicts {prompt, max_new, arrival_time, priority} sorted by
+    arrival; fully deterministic in `seed`.
+    """
+    rng = np.random.default_rng(seed)
+    proc = ZipfMarkov(vocab, seed=seed)
+    n_hi = max(1, int(round(hi_frac * n_requests)))
+    n_lo = n_requests - n_hi
+    reqs = []
+    for i in range(n_lo):
+        L = int(rng.integers(24, 33))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 29), i)
+        reqs.append({
+            "prompt": np.asarray(proc.sample(key, 1, L))[0],
+            "max_new": int(rng.integers(32, 49)),
+            "arrival_time": float(rng.uniform(0.0, 1.0)),
+            "priority": 1,
+        })
+    for i in range(n_hi):
+        L = int(rng.integers(8, 13))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 31), i)
+        reqs.append({
+            "prompt": np.asarray(proc.sample(key, 1, L))[0],
+            "max_new": int(rng.integers(4, 9)),
+            "arrival_time": float(rng.uniform(2.0, span)),
+            "priority": 0,
+        })
+    reqs.sort(key=lambda r: r["arrival_time"])
     return reqs
 
 

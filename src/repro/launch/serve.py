@@ -13,6 +13,14 @@ Two modes:
           --bits 4 --dtype float --num-slots 8 --num-requests 32 \
           --rate 2.0 --max-new 48
 
+  SLA scheduling rides on top (docs/serving.md#sla-scheduler):
+  ``--priorities K`` draws each request's class from [0, K) (0 = most
+  urgent), ``--prefill-chunk C`` interleaves long prompt prefills with
+  decode steps in C-token chunks, and ``--max-preemptions P`` (needs
+  ``--priorities >= 2``) lets urgent arrivals evict lower-priority
+  victims by spilling their packed KV rows to host — all three are
+  token-identical to the plain FIFO serve.
+
 * ``--mode static`` — the legacy same-length batch path (Engine).
 
       PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
@@ -65,7 +73,8 @@ from repro.serving.telemetry import record_quant_health
 from repro.train import step as step_mod
 
 _STATIC_ONLY = ("batch", "prompt_len")
-_CONTINUOUS_ONLY = ("num_slots", "num_requests", "rate")
+_CONTINUOUS_ONLY = ("num_slots", "num_requests", "rate", "prefill_chunk",
+                    "priorities", "max_preemptions")
 
 
 def load_params(cfg, ckpt_dir):
@@ -163,6 +172,23 @@ def validate_flags(args) -> None:
                 "with --num-slots/--num-requests/--max-new (or pass "
                 "--mode static)"
             )
+    if args.prefill_chunk is not None and args.prefill_chunk < 1:
+        raise SystemExit("--prefill-chunk wants a positive chunk length, "
+                         f"got {args.prefill_chunk}")
+    if args.priorities is not None and args.priorities < 1:
+        raise SystemExit("--priorities wants at least one class, "
+                         f"got {args.priorities}")
+    if args.max_preemptions is not None:
+        if args.max_preemptions < 0:
+            raise SystemExit("--max-preemptions must be >= 0, "
+                             f"got {args.max_preemptions}")
+        if args.max_preemptions > 0 and (args.priorities is None
+                                         or args.priorities < 2):
+            raise SystemExit(
+                "--max-preemptions > 0 evicts a strictly lower-priority "
+                "victim, which needs --priorities >= 2 (a single class "
+                "can never preempt itself)"
+            )
 
 
 def build_argparser() -> argparse.ArgumentParser:
@@ -222,6 +248,22 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--rate", type=float, default=None,
                     help="mean request arrivals per engine step "
                          "(default: 2.0)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="split long prompt prefills into C-token chunks "
+                         "interleaved with decode steps (continuous mode; "
+                         "token-identical to plain prefill — "
+                         "docs/serving.md#sla-scheduler)")
+    ap.add_argument("--priorities", type=int, default=None, metavar="K",
+                    help="draw each request's priority class uniformly "
+                         "from [0, K); class 0 is most urgent and admits "
+                         "first (continuous mode; default: 1 class)")
+    ap.add_argument("--max-preemptions", type=int, default=None, metavar="P",
+                    help="let an urgent arrival evict a lower-priority "
+                         "running request up to P times per victim, "
+                         "spilling its packed KV rows to host and "
+                         "restoring them bit-exactly later (continuous "
+                         "mode; needs --priorities >= 2; default: 0 = "
+                         "never preempt)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens of the first request as they land")
     # telemetry sinks (docs/observability.md); either flag swaps the
@@ -345,15 +387,23 @@ def main(argv=None):
     num_slots = args.num_slots if args.num_slots is not None else 8
     num_requests = args.num_requests if args.num_requests is not None else 32
     rate = args.rate if args.rate is not None else 2.0
+    priorities = args.priorities if args.priorities is not None else 1
+    max_preemptions = (args.max_preemptions
+                       if args.max_preemptions is not None else 0)
     reqs = synthetic.serving_workload(
         cfg.vocab_size, num_requests,
         max_new_range=(max(1, args.max_new // 4), args.max_new),
-        rate=rate,
+        rate=rate, priorities=priorities,
     )
     max_seq_len = max(len(r["prompt"]) for r in reqs) + args.max_new
     server = Server(params, cfg, num_slots=num_slots,
                     max_seq_len=max_seq_len, sharder=sharder,
-                    telemetry=telemetry)
+                    telemetry=telemetry, prefill_chunk=args.prefill_chunk,
+                    max_preemptions=max_preemptions)
+    if priorities > 1 or args.prefill_chunk is not None:
+        print(f"scheduler: {priorities} priority classes, "
+              f"prefill chunk {args.prefill_chunk or 'off'}, "
+              f"max preemptions {max_preemptions}")
     if sharder is not None:
         kvb = server.pool.kv_bytes()
         print(f"kv pool: {kvb['total']/1e6:.3f} MB total, "
@@ -367,6 +417,7 @@ def main(argv=None):
         rid = server.submit(r["prompt"], r["max_new"],
                             temperature=args.temperature,
                             arrival_time=r["arrival_time"],
+                            priority=r.get("priority", 0),
                             on_token=stream)
         if first_id is None:
             first_id = rid
@@ -375,7 +426,8 @@ def main(argv=None):
     toks = sum(len(t) for t in results.values())
     lat = [r.finished_at - r.arrival_time for r in server.scheduler.finished]
     print(f"served {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s continuous, {server.steps} engine steps)")
+          f"({toks/dt:.1f} tok/s continuous, {server.steps} engine steps, "
+          f"{server.scheduler.n_preemptions} preemptions)")
     print(f"latency (engine steps): mean {np.mean(lat):.1f} "
           f"p95 {np.percentile(lat, 95):.1f}")
     print("sample:", results[first_id])

@@ -219,6 +219,38 @@ def flash_attention(
     return out.reshape(B, Sq, H, Dh)
 
 
+def prefill_chunk_attention(q, k, v, q_pos, *, cap=0.0):
+    """One chunk of a chunked prefill: C query rows at TRACED absolute
+    positions ``q_pos`` [C] attend causally over a fixed-length dense
+    workspace k,v [B,Skv,K,Dh] that already holds every position up to
+    ``q_pos[-1]`` (the server writes the chunk's own K/V before calling).
+
+    Bitwise equal to ``flash_attention`` on the full prompt for the same
+    query rows when Skv fits one KV chunk (Skv <= chunk_kv): the online-
+    softmax scan then runs exactly one iteration whose combine is exact —
+    ``m_new = max(NEG_INF/2, m_c) = m_c`` (``_chunk_attend`` clamps m_c
+    at NEG_INF/2), ``b = exp(0) = 1``, ``l = 0*a + l_c = l_c``,
+    ``acc = pv_c`` — so scan + epilogue collapse to this single
+    ``_chunk_attend`` + epilogue.  Masked workspace rows (future
+    positions, unwritten zeros) contribute exact zeros either way.  The
+    server gates its chunked path on Skv <= 1024 to keep this argument
+    (and one compile per bucket: q_pos is traced, no static q_start).
+    Window/ring caches are excluded — a ring overwrite inside the prompt
+    would break "workspace row i holds position i"."""
+    B, C, H, Dh = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, C, K, G, Dh)
+    k_pos = jnp.arange(Skv)
+    m, l, pv = _chunk_attend(
+        qg, k, v, q_pos, k_pos,
+        causal=True, window=0, cap=cap, sm_scale=Dh**-0.5,
+    )
+    o = pv / jnp.maximum(l, 1e-30)[..., None]  # [B,K,G,C,Dh]
+    o = o.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    return o.reshape(B, C, H, Dh)
+
+
 # --------------------------------------------------------------------------
 # KV cache + decode
 # --------------------------------------------------------------------------

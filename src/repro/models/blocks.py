@@ -143,6 +143,56 @@ def apply_layer_seq(
     return x, cache_out, aux
 
 
+def apply_layer_prefill_chunk(p, x, cache, positions, *, mixer, ffn, cfg,
+                              constrain):
+    """One layer over ONE CHUNK of a chunked prefill.  x [B,C,D] holds C
+    consecutive prompt rows at traced absolute ``positions`` [C];
+    ``cache`` is this layer's dense bf16 workspace {"k","v": [B,Sb,K,Dh],
+    "pos": [Sb]} already holding every earlier chunk.  Writes the chunk's
+    K/V at positions[0] (the server guarantees positions[0] + C <= Sb, so
+    the dynamic_update never clamps), attends over the workspace, and
+    runs the identical per-row norm/projection/FFN math as
+    ``apply_layer_seq`` — rows of the final chunk therefore match the
+    plain prefill's rows bitwise (see prefill_chunk_attention).  Returns
+    (x, updated workspace).
+
+    Chunked prefill is gated (server._bucketing_safe + full attention) to
+    plain attention layers with a dense MLP: sliding windows break the
+    row<->position identity of the workspace and MoE routing mixes
+    padded rows into real ones."""
+    assert mixer == "attn", "chunked prefill supports full attention only"
+    assert ffn != "moe", "chunked prefill excludes MoE layers"
+    h = norm(p["mixer_norm"], x, cfg.norm_type)
+    q, k, v = attn_mod.project_qkv(p["mixer"], h, cfg, positions,
+                                   constrain=constrain)
+    q = constrain(q, "heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+    c0 = positions[0]
+    k_ws = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, c0, axis=1)
+    v_ws = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, c0, axis=1)
+    pos_ws = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions.astype(jnp.int32), c0, axis=0
+    )
+    o = attn_mod.prefill_chunk_attention(
+        q, k_ws, v_ws, positions, cap=cfg.attn_logit_softcap
+    )
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    o = dense(p["mixer"]["wo"], o, mode=cfg.matmul_mode)
+    if cfg.post_block_norm:
+        o = norm(p["post_mixer_norm"], o, cfg.norm_type)
+    x = x + o
+    x = constrain(x, "residual")
+    if ffn is not None:
+        h = norm(p["ffn_norm"], x, cfg.norm_type)
+        o = mlp(p["ffn"], h, cfg, constrain)
+        if cfg.post_block_norm:
+            o = norm(p["post_ffn_norm"], o, cfg.norm_type)
+        x = x + o
+        x = constrain(x, "residual")
+    return x, {"k": k_ws, "v": v_ws, "pos": pos_ws}
+
+
 def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_attn):
     """Single-token mode. x [B,D]; pos is a shared scalar or a per-row
     vector [B] (continuous batching). Returns (x, new_cache)."""
@@ -268,6 +318,41 @@ def apply_stack_decode(stack, x, caches, pos, cfg, *, constrain, decode_attn):
                 params[j], x, cache_j, pos,
                 mixer=mixer, ffn=ffn_kind, cfg=cfg, constrain=constrain,
                 decode_attn=decode_attn,
+            )
+            caches[j] = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, idx, 0),
+                caches[j], c,
+            )
+        return (x, tuple(caches)), None
+
+    n_periods = cfg.n_layers // cfg.scan_period()
+    (x, new_caches), _ = jax.lax.scan(
+        period_body, (x, caches),
+        (tuple(stack), jnp.arange(n_periods, dtype=jnp.int32)),
+    )
+    return x, new_caches
+
+
+def apply_stack_prefill_chunk(stack, x, caches, positions, cfg, *, constrain):
+    """Run all layers over one prefill chunk.  ``caches`` is a dense bf16
+    workspace tuple in apply_stack_decode's layout (per period position,
+    leaves with a leading n_periods axis); like decode, it travels in the
+    scan CARRY with dynamic_index updates — one compile covers every
+    chunk index because ``positions`` is traced.  Returns (x, caches)."""
+    sched = stack_schedule(cfg)
+
+    def period_body(carry, xs):
+        x, caches = carry
+        params, idx = xs
+        caches = list(caches)
+        for j, (mixer, ffn_kind) in enumerate(sched):
+            cache_j = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+                caches[j],
+            )
+            x, c = apply_layer_prefill_chunk(
+                params[j], x, cache_j, positions,
+                mixer=mixer, ffn=ffn_kind, cfg=cfg, constrain=constrain,
             )
             caches[j] = jax.tree.map(
                 lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, idx, 0),

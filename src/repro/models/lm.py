@@ -107,6 +107,32 @@ def backbone_seq(params, inputs, cfg, *, constrain=NO_CONSTRAIN, q_pad=None,
     return x, caches, aux
 
 
+def backbone_chunk(params, inputs, workspace, chunk_start, cfg, *,
+                   constrain=NO_CONSTRAIN):
+    """One chunk of a chunked prefill: run the backbone over C
+    consecutive prompt rows starting at TRACED absolute position
+    ``chunk_start``, against a dense bf16 ``workspace`` (init_caches of
+    the cfg.with_kv_quant(16) twin, batch 1, bucketed prompt length)
+    holding every earlier chunk's K/V.  Returns (normed hidden [B,C,D],
+    updated workspace).
+
+    Per-row ops (embed, norms, projections, RoPE, FFN) are row-wise
+    identical to ``backbone_seq`` and the chunk attention is bitwise
+    equal to flash_attention for workspace lengths <= one KV chunk
+    (models/attention.prefill_chunk_attention), so the final chunk's
+    rows — and the tokens sampled from them — match a plain prefill
+    (pinned by tests/test_serving.py's chunked golden test)."""
+    x = embed_inputs(params, inputs, cfg)
+    x = constrain(x, "residual")
+    C = x.shape[1]
+    positions = chunk_start + jnp.arange(C, dtype=jnp.int32)
+    x, workspace = blocks.apply_stack_prefill_chunk(
+        params["stack"], x, workspace, positions, cfg, constrain=constrain,
+    )
+    x = norm(params["final_norm"], x, cfg.norm_type)
+    return x, workspace
+
+
 def loss_fn(params, tokens, labels, cfg, *, constrain=NO_CONSTRAIN, q_pad=None,
             loss_chunk: int = 512, remat: bool = True):
     """Mean next-token cross entropy (+ MoE aux). Labels = tokens shifted,

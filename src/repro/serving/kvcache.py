@@ -80,6 +80,44 @@ def scatter_row(pool, cc, slot, length):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def workspace_to_row(workspace, cache_len: int, kvq):
+    """Convert a dense bf16 chunked-prefill workspace (lm.init_caches of
+    the kv16 twin config, batch 1, bucket length Sb) into the batch-1
+    cache tree `scatter_row` expects from a plain prefill: leaves in the
+    POOL's layout (length cache_len; packed codes + scales when `kvq` is
+    a quantized spec).  Pure/traceable — the server inlines it into its
+    chunk-commit jit.
+
+    Bit-exactness contract: encode_rows here sees exactly the K/V rows
+    write_cache_prefill would have encoded (same projections, blockwise
+    over the feature dim only), so the committed packed row is identical
+    to the plain path's.  Workspace `pos` is arange over the written
+    prefix and -1 beyond; positions >= prompt_len are invalidated by
+    scatter_row's validity mask exactly as plain padding is."""
+    from repro.kernels.kv_dequant import encode_rows
+
+    def place(x):
+        full = jnp.zeros(x.shape[:2] + (cache_len,) + x.shape[3:], x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(full, x, 0, axis=2)
+
+    cc = []
+    for layer in workspace:
+        k, v, pos = layer["k"], layer["v"], layer["pos"]
+        n_p, b1, sb = k.shape[:3]
+        pos_full = jnp.full((n_p, cache_len), -1, jnp.int32)
+        pos_full = jax.lax.dynamic_update_slice(pos_full, pos, (0, 0))
+        if kvq is not None:
+            feat = k.shape[-2] * k.shape[-1]
+            kp, ks = encode_rows(k.reshape(n_p, b1, sb, feat), kvq)
+            vp, vs = encode_rows(v.reshape(n_p, b1, sb, feat), kvq)
+            cc.append({"k_packed": place(kp), "k_scales": place(ks),
+                       "v_packed": place(vp), "v_scales": place(vs),
+                       "pos": pos_full})
+        else:
+            cc.append({"k": place(k), "v": place(v), "pos": pos_full})
+    return tuple(cc)
+
+
 class SlotKVCache:
     """Fixed pool of `num_slots` decode slots over per-slot caches."""
 
@@ -97,6 +135,8 @@ class SlotKVCache:
                 self.caches, sharder.cache_spec_tree(self.caches, num_slots)
             )
         self._free = list(range(num_slots - 1, -1, -1))  # pop() -> lowest id
+        self._spill_fn = None    # jitted row gather/scatter, compiled on
+        self._restore_fn = None  # first preemption (slot is a traced arg)
         self.active = np.zeros(num_slots, dtype=bool)
         # absolute position of the NEXT token fed to each slot (-1 = idle)
         self.next_pos = np.full(num_slots, -1, dtype=np.int64)
@@ -151,6 +191,71 @@ class SlotKVCache:
     def room(self, slot: int) -> int:
         """Decode positions left before this slot hits the cache budget."""
         return self.cache_len - int(self.next_pos[slot])
+
+    def spill_slot(self, slot: int) -> dict:
+        """Copy row `slot` of every cache leaf to host, AS STORED — packed
+        code words and absmax scales for quantized caches, never a
+        dequantize — so a later `restore_slot` is bit-exact by
+        construction and a kv4 spill moves ~4/16 of the bf16-equivalent
+        bytes (the preemption economics the paper's storage argument
+        implies).  Returns the spill record the server parks on the
+        preempted request: leaf rows in tree_flatten order, the slot's
+        next_pos, and packed/logical byte counts of the KV payload
+        (pos + SSM leaves ride along for restore but are precision-
+        invariant, so they count toward neither)."""
+        from repro.core.packing import codes_per_word
+
+        assert self.active[slot], "spill of a free slot"
+        kv_keys = {"k", "v", "k_packed", "k_scales", "v_packed", "v_scales"}
+        kv_bits = getattr(self.cfg, "kv_bits", 16) or 16
+        if self._spill_fn is None:
+            self._spill_fn = jax.jit(lambda caches, s: [
+                leaf[:, s] for leaf in jax.tree_util.tree_leaves(caches)])
+        # one compiled gather + ONE host round trip for the whole record
+        # (a per-leaf device_get would pay a blocking sync per leaf)
+        rows = jax.device_get(self._spill_fn(self.caches, slot))
+        bytes_packed = 0
+        bytes_logical = 0
+        paths = jax.tree_util.tree_leaves_with_path(self.caches)
+        for (path, _), row in zip(paths, rows):
+            key = next((getattr(k, "key", None) for k in path
+                        if getattr(k, "key", None) in kv_keys), None)
+            if key is None:
+                continue
+            bytes_packed += row.nbytes
+            if key in ("k", "v"):
+                bytes_logical += row.size * 2
+            elif key in ("k_packed", "v_packed"):
+                bytes_logical += row.size * codes_per_word(kv_bits) * 2
+        if self.telemetry.enabled:
+            self.telemetry.inc("kv_spill_bytes_total", bytes_packed,
+                               kind="packed")
+            self.telemetry.inc("kv_spill_bytes_total", bytes_logical,
+                               kind="logical")
+        return {"rows": rows, "next_pos": int(self.next_pos[slot]),
+                "bytes_packed": bytes_packed, "bytes_logical": bytes_logical}
+
+    def restore_slot(self, slot: int, spill: dict) -> None:
+        """Write a spill record back into (re-alloc'd) row `slot`.  Every
+        stored position of the row is overwritten, so whatever a later
+        occupant — or the idle-row decode write, which parks pos=-1 at a
+        clamped index — left behind is erased; restore then resume is
+        token-identical to never having been preempted (pinned by
+        tests/test_serving.py)."""
+        assert self.active[slot], "restore into a free slot — alloc first"
+        n_leaves = len(jax.tree_util.tree_leaves(self.caches))
+        assert n_leaves == len(spill["rows"]), "spill/pool layout mismatch"
+        if self._restore_fn is None:
+            def _scatter(caches, rows, s):
+                leaves, treedef = jax.tree_util.tree_flatten(caches)
+                new = [leaf.at[:, s].set(row)
+                       for leaf, row in zip(leaves, rows)]
+                return jax.tree_util.tree_unflatten(treedef, new)
+            # donate the pool: one compiled program of in-place row
+            # writes (unjitted .at[].set would copy every full leaf)
+            self._restore_fn = jax.jit(_scatter, donate_argnums=0)
+        self.caches = self._restore_fn(self.caches, list(spill["rows"]), slot)
+        self.next_pos[slot] = spill["next_pos"]
 
     def kv_bytes(self) -> dict:
         """Resident HBM bytes of the pool's attention KV leaves (packed

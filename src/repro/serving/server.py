@@ -9,6 +9,20 @@ scattering the resulting KV rows into the slot — requests join and leave
 the decode batch mid-flight with no recompilation and no effect on the
 other rows (docs/serving.md).
 
+Admission order is SLA-aware (serving/scheduler.py): requests carry a
+priority class (0 = most urgent), classes drain in per-class FIFO order
+with optional anti-starvation aging, and — with ``max_preemptions > 0``
+— an urgent arrival that finds the pool full can evict a lower-priority
+victim by spilling its PACKED cache rows to host (codes + scales as
+stored, no dequantize: ~kv_bits/16 of the bf16-equivalent bytes) and
+restoring them bit-exactly later, so preempted token streams are
+token-identical to an unpreempted run.  ``prefill_chunk=C`` splits long
+prompts into fixed-size chunks interleaved with decode steps, bounding
+how long one admission can stall the running batch; the committed rows
+match a plain prefill bitwise (models/attention.prefill_chunk_attention)
+so chunking never changes tokens.  All of this is host-side policy —
+the jitted model steps are unchanged.
+
 Restrictions: prompt-length bucketing (padding) is only enabled when
 every mixer is full attention and the FFNs are dense — padded positions
 are provably masked out of a causal full-attention cache, but would
@@ -62,7 +76,7 @@ from repro.kernels.kv_dequant import kv_spec
 from repro.models import blocks, lm
 from repro.models.sharding import check_decode_capability
 from repro.serving.engine import sample_token
-from repro.serving.kvcache import SlotKVCache, scatter_row
+from repro.serving.kvcache import SlotKVCache, scatter_row, workspace_to_row
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.telemetry import (
     NOOP,
@@ -77,6 +91,33 @@ def bucket_len(n: int, *, minimum: int = 8, cap: int | None = None) -> int:
     times instead of once per distinct prompt length."""
     b = max(minimum, 1 << max(0, n - 1).bit_length())
     return min(b, cap) if cap is not None else b
+
+
+#: flash_attention's KV-chunk size — chunked prefill is bitwise equal to
+#: the plain prefill only while the whole bucketed prompt fits ONE KV
+#: chunk of the flash scan (models/attention.prefill_chunk_attention);
+#: longer buckets fall back to plain prefill per request.
+_FLASH_KV_CHUNK = 1024
+
+
+class _ChunkState:
+    """Host-side progress of one chunked admission: the padded prompt,
+    the per-chunk start offsets (the final start is shifted left so a
+    fixed-size chunk never overruns the bucket — overlapped rows rewrite
+    identical values), and the dense bf16 workspace the chunks write."""
+
+    def __init__(self, *, req, slot, L, Sb, padded, starts, workspace, key,
+                 t_start):
+        self.req = req
+        self.slot = slot
+        self.L = L
+        self.Sb = Sb
+        self.padded = padded
+        self.starts = starts
+        self.workspace = workspace
+        self.key = key
+        self.t_start = t_start
+        self.next = 0           # index of the next chunk to dispatch
 
 
 def _bucketing_safe(cfg) -> bool:
@@ -100,13 +141,29 @@ class Server:
                  eos_id: int | None = None, seed: int = 0,
                  dtype=jnp.bfloat16, plan=None,
                  matmul_mode: str | None = None, sharder=None,
-                 telemetry=NOOP):
+                 telemetry=NOOP, prefill_chunk: int | None = None,
+                 aging_steps: int | None = 64, max_preemptions: int = 0):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
         check_decode_capability(
             cfg, sharder,
             caller="the continuous-batching Server (serving/server.py)",
         )
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if not _bucketing_safe(cfg):
+                raise ValueError(
+                    "prefill_chunk needs a bucketing-safe arch (causal "
+                    "full attention, dense FFN): sliding windows and MoE "
+                    "dispatch absorb chunk boundaries"
+                )
+            if sharder is not None:
+                raise ValueError(
+                    "prefill_chunk is single-device only (the chunk "
+                    "workspace and commit path are unsharded); drop one "
+                    "of prefill_chunk / sharder"
+                )
         self.telemetry = telemetry
         if plan is not None:
             from repro.models.quantize import quantize_tree
@@ -128,9 +185,14 @@ class Server:
         self.kvq = kv_spec(cfg)  # None = bf16 cache; else packed k-bit
         self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype,
                                 sharder=sharder, telemetry=telemetry)
-        self.scheduler = Scheduler(eos_id=eos_id, telemetry=telemetry)
+        self.scheduler = Scheduler(eos_id=eos_id, telemetry=telemetry,
+                                   aging_steps=aging_steps,
+                                   max_preemptions=max_preemptions)
         self._key = jax.random.PRNGKey(seed)
         self._bucketed = _bucketing_safe(cfg)
+        self._prefill_chunk = prefill_chunk
+        self._chunking: dict[int, _ChunkState] = {}   # slot -> progress
+        self._spilled: dict[int, dict] = {}           # request id -> spill
         self._cur_tok = np.zeros(num_slots, dtype=np.int64)
         self._temps = np.zeros(num_slots, dtype=np.float32)
         self.steps = 0          # decode steps executed (virtual clock)
@@ -175,6 +237,41 @@ class Server:
             return nxt, caches
 
         self._step = jax.jit(step, donate_argnums=(2,))
+
+        if prefill_chunk is not None:
+            # dense bf16 workspace config for the chunk K/V (the packed
+            # encode happens ONCE at commit, exactly like plain prefill)
+            self._cfg16 = cfg.with_kv_quant(16)
+
+            def chunk_step(params, workspace, tokens, chunk_start):
+                """One prefill chunk: C rows at traced chunk_start write
+                their K/V into the workspace and attend over it.
+                chunk_start is traced, so one compile covers every chunk
+                of every prompt in the same bucket."""
+                with tp_scope():
+                    h, workspace = lm.backbone_chunk(
+                        params, tokens, workspace, chunk_start, cfg,
+                        constrain=constrain,
+                    )
+                return h, workspace
+
+            self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,))
+
+            def chunk_commit(params, pool, workspace, h, last_rel, length,
+                             slot, key, temperature):
+                """Final-chunk epilogue: sample the first token at the
+                true last prompt row and scatter the (re-encoded)
+                workspace into `slot` — the committed row is bitwise the
+                row a plain prefill admission would have written."""
+                h_last = jax.lax.dynamic_index_in_dim(h, last_rel, 1,
+                                                      keepdims=False)
+                logits = lm.logits_from_hidden(params, h_last, cfg)
+                tok = sample_token(logits, key, temperature)
+                cc = workspace_to_row(workspace, max_seq_len, self.kvq)
+                pool = scatter_row(pool, cc, slot, length)
+                return tok, pool
+
+            self._chunk_commit = jax.jit(chunk_commit, donate_argnums=(1, 2))
 
         # append-quantize health probe (telemetry.kv_probe_every > 0 and a
         # quantized cache): a SEPARATE bf16-cache prefill jit whose K/V
@@ -222,7 +319,8 @@ class Server:
 
     # -- API ---------------------------------------------------------------
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
-               arrival_time: float = 0.0, on_token=None) -> int:
+               arrival_time: float = 0.0, priority: int = 0,
+               on_token=None) -> int:
         prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -232,22 +330,29 @@ class Server:
                 f"cache budget {self.pool.cache_len}"
             )
         req = Request(prompt=prompt, max_new=max_new, temperature=temperature,
-                      arrival_time=arrival_time, on_token=on_token)
+                      priority=priority, arrival_time=arrival_time,
+                      on_token=on_token)
+        # submit first: the scheduler assigns req.id (per-Scheduler
+        # counter), which the trace event needs
+        self.scheduler.submit(req)
         tel = self.telemetry
         if tel.enabled:
             req.t_submit = tel.now()
             tel.event("submit", req.t_submit, request_id=req.id,
                       step=self.steps, prompt_len=len(prompt),
-                      max_new=max_new, arrival_time=arrival_time)
-        self.scheduler.submit(req)
+                      max_new=max_new, arrival_time=arrival_time,
+                      priority=priority)
         return req.id
 
     def step(self) -> int:
-        """Admit arrived requests into free slots, then run one decode
-        step over the pool.  Returns the number of useful tokens
+        """Admit arrived requests (preempting a lower-priority victim
+        when the pool is full and preemption is enabled), advance one
+        prefill chunk per chunking slot, then run one decode step over
+        the non-chunking slots.  Returns the number of useful tokens
         produced (admission prefills included)."""
         produced = self._admit()
-        if self.scheduler.running:
+        produced += self._advance_chunks()
+        if len(self.scheduler.running) > len(self._chunking):
             produced += self._decode_once()
         self.steps += 1
         return produced
@@ -296,15 +401,31 @@ class Server:
     def _admit(self) -> int:
         produced = 0
         tel = self.telemetry
-        while self.pool.n_free:
+        while True:
             req = self.scheduler.next_admissible(self.steps)
             if req is None:
                 break
+            if not self.pool.n_free:
+                # full pool: evict a strictly lower-priority victim if
+                # preemption is on (mid-chunk slots have no committed
+                # cache rows to spill and are never victims)
+                vslot = self.scheduler.preemption_victim(
+                    req, self.steps, exclude=self._chunking)
+                if vslot is None:
+                    break
+                self._preempt(vslot, req)
             slot = self.pool.alloc()
             self.scheduler.bind(req, slot, self.steps)
+            if req.id in self._spilled:
+                self._resume(req, slot)
+                continue
             L = len(req.prompt)
             Sb = (bucket_len(L, cap=self.pool.cache_len)
                   if self._bucketed else L)
+            if (self._prefill_chunk is not None and L > self._prefill_chunk
+                    and Sb <= _FLASH_KV_CHUNK):
+                self._start_chunked(req, slot, L, Sb)
+                continue
             padded = np.zeros((1, Sb), dtype=np.int64)
             padded[0, :L] = req.prompt
             self._key, sub = jax.random.split(self._key)
@@ -347,6 +468,137 @@ class Server:
                 self._temps[slot] = req.temperature
         return produced
 
+    def _preempt(self, slot: int, by: Request) -> None:
+        """Evict the request in `slot` for higher-priority request `by`:
+        copy its packed cache rows to host AS STORED (no dequantize —
+        spill bytes are ~kv_bits/16 of the bf16-equivalent), requeue it,
+        free the slot.  Restore is bit-exact, so its eventual token
+        stream is identical to an unpreempted run (greedy)."""
+        victim = self.scheduler.running[slot]
+        tel = self.telemetry
+        t0 = tel.now() if tel.enabled else 0.0
+        spill = self.pool.spill_slot(slot)
+        spill["cur_tok"] = int(self._cur_tok[slot])
+        self._spilled[victim.id] = spill
+        self.scheduler.preempt(slot, self.steps)
+        self.pool.free(slot)
+        if tel.enabled:
+            t1 = tel.now()
+            tel.event("preempt", t0, request_id=victim.id, step=self.steps,
+                      slot=slot, by=by.id, n_tokens=len(victim.tokens))
+            tel.span("spill", t0, t1, request_id=victim.id, step=self.steps,
+                     slot=slot, bytes_packed=spill["bytes_packed"],
+                     bytes_logical=spill["bytes_logical"])
+
+    def _resume(self, req: Request, slot: int) -> None:
+        """Write a preempted request's spilled rows back into its new
+        slot and rejoin the decode batch exactly where it left off."""
+        spill = self._spilled.pop(req.id)
+        tel = self.telemetry
+        t0 = tel.now() if tel.enabled else 0.0
+        self.pool.restore_slot(slot, spill)
+        self._cur_tok[slot] = spill["cur_tok"]
+        self._temps[slot] = req.temperature
+        if tel.enabled:
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(self.pool.caches)[0])
+            t1 = tel.now()
+            tel.span("restore", t0, t1, request_id=req.id, step=self.steps,
+                     slot=slot, bytes_packed=spill["bytes_packed"])
+
+    def _start_chunked(self, req: Request, slot: int, L: int, Sb: int) -> None:
+        """Begin a chunked admission: allocate the dense bf16 workspace
+        and schedule fixed-size chunks.  The final chunk's start is
+        shifted left to end exactly at the bucket edge (min((n-1)C,
+        Sb-C)) so the fixed chunk shape never overruns the workspace —
+        overlapped rows recompute and rewrite identical values."""
+        C = self._prefill_chunk
+        tel = self.telemetry
+        padded = np.zeros((1, Sb), dtype=np.int64)
+        padded[0, :L] = req.prompt
+        n_chunks = -(-L // C)
+        starts = [i * C for i in range(n_chunks - 1)]
+        starts.append(min((n_chunks - 1) * C, Sb - C))
+        self._key, sub = jax.random.split(self._key)
+        workspace = lm.init_caches(self._cfg16, 1, Sb)
+        t0 = tel.now() if tel.enabled else 0.0
+        if tel.enabled and req.t_submit is not None:
+            tel.span("queue_wait", req.t_submit, t0, request_id=req.id,
+                     step=self.steps,
+                     steps=float(self.steps - req.arrival_time))
+        self._chunking[slot] = _ChunkState(
+            req=req, slot=slot, L=L, Sb=Sb, padded=padded, starts=starts,
+            workspace=workspace, key=sub, t_start=t0,
+        )
+        # masked out of the decode batch until commit: next_pos stays -1
+        # (idle row) and the fed token is zeroed
+        self._cur_tok[slot] = 0
+        self._temps[slot] = req.temperature
+
+    def _advance_chunks(self) -> int:
+        """Dispatch one prefill chunk per chunking slot; commit slots
+        whose final chunk just ran (sample the first token, scatter the
+        packed rows into the pool, join the decode batch)."""
+        produced = 0
+        tel = self.telemetry
+        for slot in list(self._chunking):
+            st = self._chunking[slot]
+            C = self._prefill_chunk
+            c0 = st.starts[st.next]
+            tokens = jnp.asarray(st.padded[:, c0:c0 + C])
+            if tel.enabled:
+                t0 = tel.now()
+            h, st.workspace = self._chunk_step(
+                self.params, st.workspace, tokens, jnp.int32(c0))
+            if tel.enabled:
+                jax.block_until_ready(h)
+                t1 = tel.now()
+                tel.observe("serve_prefill_chunk_seconds", t1 - t0)
+                tel.inc("serve_prefill_chunks_total")
+                tel.span("prefill_chunk", t0, t1, request_id=st.req.id,
+                         step=self.steps, slot=slot, chunk=st.next,
+                         chunk_start=c0, chunk_len=C)
+            st.next += 1
+            if st.next == len(st.starts):
+                produced += self._commit_chunked(slot, st, h)
+        return produced
+
+    def _commit_chunked(self, slot: int, st: _ChunkState, h) -> int:
+        req = st.req
+        tel = self.telemetry
+        del self._chunking[slot]
+        tok, new_pool = self._chunk_commit(
+            self.params, self.pool.caches, st.workspace, h,
+            jnp.int32(st.L - 1 - st.starts[-1]), jnp.int32(st.L),
+            jnp.int32(slot), st.key, jnp.float32(req.temperature),
+        )
+        self.pool.install_prefill(slot, new_pool, st.L)
+        if tel.enabled:
+            jax.block_until_ready(tok)
+            t1 = tel.now()
+            # the lifecycle-required prefill span covers the whole
+            # chunked admission (its prefill_chunk spans nest inside)
+            tel.observe("serve_prefill_seconds", t1 - st.t_start)
+            tel.observe("serve_prefill_pad_frac", (st.Sb - st.L) / st.Sb)
+            tel.inc("serve_prefills_total")
+            tel.span("prefill", st.t_start, t1, request_id=req.id,
+                     step=self.steps, slot=slot, prompt_len=st.L,
+                     padded_len=st.Sb, chunks=len(st.starts))
+            self._n_admitted += 1
+            if (self._probe is not None
+                    and (self._n_admitted - 1) % tel.kv_probe_every == 0):
+                self._probe_kv_error(jnp.asarray(st.padded), st.L)
+        first = int(tok[0])
+        self._emit(req, first)
+        if self.scheduler.should_retire(req):
+            self._retire(req, slot,
+                         "budget" if len(req.tokens) >= req.max_new
+                         else "eos")
+        else:
+            self._cur_tok[slot] = first
+            self._temps[slot] = req.temperature
+        return 1
+
     def _decode_once(self) -> int:
         tok = jnp.asarray(np.where(self.pool.active, self._cur_tok, 0),
                           jnp.int32)
@@ -376,6 +628,8 @@ class Server:
         nxt = np.asarray(nxt)
         produced = 0
         for slot, req in list(self.scheduler.running.items()):
+            if slot in self._chunking:
+                continue    # mid-chunk: masked idle row, no token yet
             t = int(nxt[slot])
             self._emit(req, t)
             produced += 1

@@ -109,6 +109,23 @@ METRIC_FAMILIES = {
     "serve_prefill_pad_frac":
         ("histogram", "padded tail / bucket length, per admission "
          "(compile-bucket waste)", RATIO_BUCKETS),
+    # SLA scheduler: chunked prefill + preemption
+    "serve_prefill_chunks_total":
+        ("counter", "prefill chunks dispatched by chunked admissions", None),
+    "serve_prefill_chunk_seconds":
+        ("histogram", "one prefill chunk (dispatch to fence)",
+         LATENCY_BUCKETS),
+    "serve_preemptions_total":
+        ("counter", "running requests evicted for a higher-priority "
+         "admission", None),
+    "serve_resumes_total":
+        ("counter", "preempted requests restored into a slot", None),
+    "serve_requests_preempted":
+        ("gauge", "requests currently preempted (packed KV spilled to "
+         "host, awaiting resume)", None),
+    "kv_spill_bytes_total":
+        ("counter", "KV bytes copied to host by preemption spills; "
+         "kind=packed (as stored) | logical (bf16-equivalent)", None),
     # KV pool footprint (kvcache.kv_bytes(), one source of truth)
     "kv_pool_bytes":
         ("gauge", "resident KV bytes; kind=packed|logical|per_device", None),

@@ -6,7 +6,7 @@ contract between the Server/Engine instrumentation, the CI smoke that
 validates a live serve's trace, and any downstream consumer (the
 ROADMAP's SLA scheduler reads the same lifecycle):
 
-    {"v": 1, "kind": "span" | "event", "name": <str>,
+    {"v": 2, "kind": "span" | "event", "name": <str>,
      "request_id": <int | null>, "t0": <float>, "t1": <float | null>,
      "step": <int | null>, "attrs": {<str>: <json>}}
 
@@ -21,22 +21,36 @@ ROADMAP's SLA scheduler reads the same lifecycle):
 
 Request lifecycle names (docs/observability.md#span-schema):
 
-    submit       event  — request accepted into the queue
-    queue_wait   span   — submit to admission; attrs.steps = virtual wait
-    prefill      span   — admission prefill dispatch to fence;
-                          attrs: slot, prompt_len, padded_len (the
-                          static Engine's batched prefill carries a
-                          null request_id)
-    token        event  — one emitted token; attrs.first marks the TTFT
+    submit        event — request accepted into the queue
+    queue_wait    span  — submit to admission; attrs.steps = virtual wait
+    prefill_chunk span  — ONE chunk of a chunked admission prefill;
+                          attrs: slot, chunk (0-based index, required
+                          >= 0), chunk_start, chunk_len
+    prefill       span  — admission prefill dispatch to fence (chunked
+                          admissions emit it at commit, after their
+                          prefill_chunk spans); attrs: slot, prompt_len,
+                          padded_len (the static Engine's batched
+                          prefill carries a null request_id)
+    token         event — one emitted token; attrs.first marks the TTFT
                           edge (only first/last tokens are traced by
                           default — the full ITL distribution lives in
                           the serve_itl_seconds histogram)
-    decode_step  span   — one batched decode step; request_id null;
+    decode_step   span  — one batched decode step; request_id null;
                           attrs: n_active, batch_fill
-    retire       event  — request finished; attrs: n_tokens, reason
+    preempt       event — request evicted from its slot by a
+                          higher-priority admission; attrs: slot, by
+                          (preemptor id), n_tokens
+    spill         span  — the evicted slot's packed cache rows copied to
+                          host; attrs: slot, bytes_packed, bytes_logical
+    restore       span  — spilled rows written back into a re-alloc'd
+                          slot at resume; attrs: slot, bytes_packed
+    retire        event — request finished; attrs: n_tokens, reason
 
-``validate_events`` checks structure AND lifecycle ordering per request
-(exactly one submit, retire after submit, prefill inside the window).
+``validate_events`` checks structure AND lifecycle ordering per request:
+exactly one submit, retire after submit, retired requests prefilled, and
+the v2 preemption counting rules — preempt only after prefill and never
+nested, at most one spill per preempt, restore only after a matching
+spill, no token/retire while preempted (preempts > restores).
 Run as a module to validate a written trace (the CI telemetry smoke):
 
     PYTHONPATH=src python -m repro.serving.trace artifacts/trace.jsonl
@@ -47,10 +61,11 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2
 
-SPAN_NAMES = {"queue_wait", "prefill", "decode_step"}
-EVENT_NAMES = {"submit", "token", "retire"}
+SPAN_NAMES = {"queue_wait", "prefill", "prefill_chunk", "decode_step",
+              "spill", "restore"}
+EVENT_NAMES = {"submit", "token", "preempt", "retire"}
 
 _REQUIRED_KEYS = {"v", "kind", "name", "request_id", "t0", "t1", "step",
                   "attrs"}
@@ -160,7 +175,9 @@ def validate_events(events) -> dict:
         if rid is None:
             _fail(i, f"{name!r} needs a request_id")
         r = by_req.setdefault(rid, {"submit": None, "retire": None,
-                                    "prefill": None, "tokens": 0})
+                                    "prefill": None, "tokens": 0,
+                                    "preempts": 0, "spills": 0,
+                                    "restores": 0})
         if name == "submit":
             if r["submit"] is not None:
                 _fail(i, f"request {rid}: duplicate submit")
@@ -173,6 +190,9 @@ def validate_events(events) -> dict:
             if ev["t0"] < r["submit"]:
                 _fail(i, f"request {rid}: retire at {ev['t0']} precedes "
                          f"submit at {r['submit']}")
+            if r["preempts"] > r["restores"]:
+                _fail(i, f"request {rid}: retire while preempted "
+                         f"(no restore after spill)")
             r["retire"] = ev["t0"]
         else:
             if r["submit"] is None:
@@ -181,8 +201,29 @@ def validate_events(events) -> dict:
                 _fail(i, f"request {rid}: {name!r} after retire")
             if name == "prefill":
                 r["prefill"] = ev["t0"]
+            elif name == "prefill_chunk":
+                if not (0 <= ev["attrs"].get("chunk", -1)):
+                    _fail(i, f"request {rid}: prefill_chunk needs "
+                             f"attrs.chunk >= 0")
             elif name == "token":
+                if r["preempts"] > r["restores"]:
+                    _fail(i, f"request {rid}: token while preempted")
                 r["tokens"] += 1
+            elif name == "preempt":
+                if r["prefill"] is None:
+                    _fail(i, f"request {rid}: preempt before prefill")
+                if r["preempts"] > r["restores"]:
+                    _fail(i, f"request {rid}: nested preempt "
+                             f"(already preempted)")
+                r["preempts"] += 1
+            elif name == "spill":
+                if r["spills"] >= r["preempts"]:
+                    _fail(i, f"request {rid}: spill without a preempt")
+                r["spills"] += 1
+            elif name == "restore":
+                if r["restores"] >= r["spills"]:
+                    _fail(i, f"request {rid}: restore before spill")
+                r["restores"] += 1
     for rid, r in by_req.items():
         if r["retire"] is not None and r["prefill"] is None:
             raise ValueError(f"request {rid}: retired without a prefill span")

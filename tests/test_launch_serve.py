@@ -53,6 +53,16 @@ def _args(*argv):
       "m.prom"), "positive"),
     (("--mode", "static", "--kv-bits", "4", "--kv-probe-every", "2",
       "--metrics-out", "m.prom"), "continuous-mode"),
+    # SLA scheduler flags are continuous-only with validated values
+    (("--mode", "static", "--prefill-chunk", "8"), "static"),
+    (("--mode", "static", "--priorities", "2"), "static"),
+    (("--mode", "static", "--max-preemptions", "1"), "static"),
+    (("--prefill-chunk", "0"), "positive chunk length"),
+    (("--priorities", "0"), "at least one class"),
+    (("--max-preemptions", "-1"), ">= 0"),
+    # preemption needs >= 2 classes to ever find a victim
+    (("--max-preemptions", "2"), "--priorities"),
+    (("--max-preemptions", "2", "--priorities", "1"), "--priorities"),
 ])
 def test_conflicting_flags_rejected(argv, needle):
     with pytest.raises(SystemExit, match=needle):
@@ -77,6 +87,11 @@ def test_mesh_flag_validated():
     ("--kv-bits", "4", "--kv-probe-every", "2", "--metrics-out", "m.prom",
      "--trace-out", "t.jsonl"),
     ("--mode", "static", "--metrics-out", "m.prom"),
+    ("--prefill-chunk", "8"),
+    ("--priorities", "2", "--max-preemptions", "2"),
+    ("--prefill-chunk", "16", "--priorities", "3", "--max-preemptions", "1",
+     "--kv-bits", "4"),
+    ("--max-preemptions", "0"),
 ])
 def test_legal_flag_combinations_validate(argv):
     serve_mod.validate_flags(_args(*argv))
@@ -113,6 +128,9 @@ def tiny_plan(tmp_path_factory):
     ("--mode", "continuous", "--matmul-mode", "fused", "--max-new", "4"),
     ("PLAN", "--mode", "continuous", "--kv-bits", "4", "--max-new", "4"),
     ("PLAN", "--mode", "static", "--matmul-mode", "fused", "--max-new", "4"),
+    # the SLA scheduler serves end to end through the launcher
+    ("--mode", "continuous", "--kv-bits", "4", "--prefill-chunk", "8",
+     "--priorities", "2", "--max-preemptions", "1", "--max-new", "4"),
 ])
 def test_flag_matrix_serves(argv, tiny_plan, capsys):
     argv = list(argv)

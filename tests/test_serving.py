@@ -234,6 +234,100 @@ def test_server_fused_mixed_plan_serves(params):
 
 
 # -------------------------------------------------------------------------
+# (e) golden: SLA scheduling (chunked prefill + preemption) never
+#     changes tokens — policy stays out of the math
+# -------------------------------------------------------------------------
+
+_SLA_LENS, _SLA_BUDGETS = [20, 9, 30, 14], [8, 6, 7, 5]
+
+
+def _sla_prompts():
+    return [np.asarray(synthetic.ZipfMarkov(CFG.vocab_size).sample(
+        jax.random.PRNGKey(70 + i), 1, L))[0]
+        for i, L in enumerate(_SLA_LENS)]
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
+def test_chunked_prefill_token_identical(params, kv_bits):
+    """Splitting long prompt prefills into interleaved chunks must
+    stream exactly the plain server's tokens at every KV precision —
+    the chunk attention is bitwise flash_attention for one-KV-chunk
+    buckets and the committed rows equal a plain prefill's
+    (models/attention.prefill_chunk_attention, server._commit_chunked)."""
+    from repro.serving import Telemetry
+
+    cfg = CFG.with_kv_quant(kv_bits) if kv_bits < 16 else CFG
+    prompts = _sla_prompts()
+
+    def serve(**kw):
+        srv = Server(params, cfg, num_slots=2, max_seq_len=40, **kw)
+        ids = [srv.submit(p, m, arrival_time=1.0 * i)
+               for i, (p, m) in enumerate(zip(prompts, _SLA_BUDGETS))]
+        res = srv.run_until_drained()
+        return [res[r] for r in ids]
+
+    tel = Telemetry()
+    plain = serve()
+    chunked = serve(prefill_chunk=8, telemetry=tel)
+    assert plain == chunked
+    # the chunked path really ran (prompts 20 and 30 exceed the chunk)
+    assert tel.registry.counter("serve_prefill_chunks_total").value > 0
+    assert tel.registry.counter("serve_prefills_total").value == len(prompts)
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8, 4])
+def test_preemption_token_identical(params, kv_bits):
+    """Forced preemption (spill packed rows -> host, restore, resume)
+    must leave every request's stream identical to an unpreempted serve:
+    the spill round-trip is bitwise and decode rows are independent."""
+    from repro.serving import Telemetry
+
+    cfg = CFG.with_kv_quant(kv_bits) if kv_bits < 16 else CFG
+    lens, budgets = [12, 10, 8, 6, 7], [20, 18, 4, 3, 4]
+    prios = [1, 1, 0, 0, 0]
+    arriv = [0.0, 0.0, 3.0, 4.0, 5.0]
+    prompts = [np.asarray(synthetic.ZipfMarkov(CFG.vocab_size).sample(
+        jax.random.PRNGKey(80 + i), 1, L))[0] for i, L in enumerate(lens)]
+
+    def serve(sla):
+        tel = Telemetry()
+        srv = Server(params, cfg, num_slots=2, max_seq_len=40,
+                     telemetry=tel,
+                     prefill_chunk=8 if sla else None,
+                     max_preemptions=2 if sla else 0)
+        ids = [srv.submit(p, m, arrival_time=a, priority=pr if sla else 0)
+               for p, m, a, pr in zip(prompts, budgets, arriv, prios)]
+        res = srv.run_until_drained()
+        return [res[r] for r in ids], srv, tel
+
+    plain, _, _ = serve(sla=False)
+    sla, srv, tel = serve(sla=True)
+    assert srv.scheduler.n_preemptions >= 1, \
+        "the trace must actually force a preemption"
+    assert tel.registry.counter("serve_preemptions_total").value \
+        == srv.scheduler.n_preemptions
+    assert tel.registry.counter("serve_resumes_total").value \
+        == srv.scheduler.n_preemptions, "every preempted request resumed"
+    assert tel.registry.counter("kv_spill_bytes_total",
+                                kind="packed").value > 0
+    assert plain == sla
+    # the trace the SLA serve recorded passes the v2 lifecycle validator
+    from repro.serving.trace import validate_events
+    summary = validate_events(tel.tracer.events)
+    assert summary["requests"] == len(prompts)
+
+
+def test_server_rejects_bad_scheduler_flags(params):
+    with pytest.raises(ValueError):
+        Server(params, CFG, num_slots=1, max_seq_len=16, prefill_chunk=0)
+    cfg_moe = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    mparams = lm.init_params(jax.random.PRNGKey(0), cfg_moe)
+    with pytest.raises(ValueError):
+        Server(mparams, cfg_moe, num_slots=1, max_seq_len=16,
+               prefill_chunk=8)
+
+
+# -------------------------------------------------------------------------
 # satellite: the first token honors temperature
 # -------------------------------------------------------------------------
 

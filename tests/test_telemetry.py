@@ -317,6 +317,53 @@ def test_trace_validator_accepts_and_rejects():
     corrupt(lambda e: e.pop(2), "without a prefill")
 
 
+def _ok_sla_events():
+    """A full v2 preemption lifecycle: chunked admission, preempt at
+    step 3, spill, restore into a new slot, resume, retire."""
+    t = Telemetry()
+    t.event("submit", 0.0, request_id=1, step=0)
+    t.span("queue_wait", 0.0, 0.1, request_id=1, step=0, steps=0.0)
+    t.span("prefill_chunk", 0.1, 0.15, request_id=1, step=0, slot=0,
+           chunk=0, chunk_start=0, chunk_len=8)
+    t.span("prefill_chunk", 0.15, 0.2, request_id=1, step=1, slot=0,
+           chunk=1, chunk_start=8, chunk_len=8)
+    t.span("prefill", 0.1, 0.25, request_id=1, step=1, slot=0,
+           prompt_len=12, padded_len=16, chunks=2)
+    t.event("token", 0.25, request_id=1, step=1, first=True)
+    t.span("decode_step", 0.25, 0.3, step=2, n_active=1, batch_fill=0.5)
+    t.event("preempt", 0.3, request_id=1, step=3, slot=0, by=2, n_tokens=2)
+    t.span("spill", 0.3, 0.32, request_id=1, step=3, slot=0,
+           bytes_packed=256, bytes_logical=1024)
+    t.span("restore", 0.4, 0.42, request_id=1, step=5, slot=1,
+           bytes_packed=256)
+    t.event("token", 0.45, request_id=1, step=6)
+    t.event("retire", 0.5, request_id=1, step=7, n_tokens=4, reason="budget")
+    return t.tracer.events
+
+
+def test_trace_validator_v2_preemption_lifecycle():
+    """The v2 counting rules: preempt/spill/restore must nest correctly
+    and a preempted request emits nothing until restored."""
+    assert validate_events(_ok_sla_events())["requests"] == 1
+
+    def corrupt(mutate, match):
+        evs = [dict(e, attrs=dict(e["attrs"])) for e in _ok_sla_events()]
+        mutate(evs)
+        with pytest.raises(ValueError, match=match):
+            validate_events(evs)
+
+    # event indices: 0 submit, 1 queue_wait, 2-3 prefill_chunk,
+    # 4 prefill, 5 token, 6 decode_step, 7 preempt, 8 spill,
+    # 9 restore, 10 token, 11 retire
+    corrupt(lambda e: e[2]["attrs"].pop("chunk"), "chunk")
+    corrupt(lambda e: e.insert(8, e.pop(9)), "restore before spill")
+    corrupt(lambda e: e.insert(9, e.pop(10)), "token while preempted")
+    corrupt(lambda e: e.insert(10, dict(e[8])), "spill without a preempt")
+    corrupt(lambda e: e.insert(9, dict(e[7])), "nested preempt")
+    corrupt(lambda e: e.__delitem__(slice(9, 11)), "retire while preempted")
+    corrupt(lambda e: e.insert(2, e.pop(7)), "preempt before prefill")
+
+
 # -------------------------------------------------------------------------
 # quantization health riders
 # -------------------------------------------------------------------------
