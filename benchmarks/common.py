@@ -5,6 +5,7 @@ format (one benchmark module per paper table/figure)."""
 from __future__ import annotations
 
 import json
+import subprocess
 import time
 from pathlib import Path
 
@@ -116,6 +117,29 @@ def compile_warm(fn, passes: int = 2):
     for _ in range(passes):
         r = fn()
     return r
+
+
+def run_meta(cli_args: dict | None = None) -> dict:
+    """Provenance stamp shared by every bench JSON and the regression
+    ledger (benchmarks/ledger.py): enough to answer "what produced this
+    number" when two runs disagree."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=ART.parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "created_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "args": dict(cli_args) if cli_args else {},
+    }
 
 
 def emit(rows):

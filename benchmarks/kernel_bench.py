@@ -63,7 +63,7 @@ def _measure_pair(x, qt):
     return us_deq, us_fus
 
 
-def run(log=print, interpret=False, gate=False):
+def run(log=print, interpret=False, gate=False, cli_args=None):
     """gate=True raises if the 4-bit fused speedup misses FUSED_GATE_X —
     the dedicated CI/script invocation; suite sweeps (benchmarks/run.py)
     keep gate=False so one noisy timing cannot abort the whole sweep
@@ -129,6 +129,7 @@ def run(log=print, interpret=False, gate=False):
         rows.append(("kernel/pallas_interpret_smoke", 0.0, f"rel_err={rel:.2e}"))
         log(f"  pallas interpret smoke: rel err {rel:.2e} vs oracle (ok)")
 
+    out["meta"] = common.run_meta(cli_args)
     common.save_json("kernel_bench", dict(out, rows=[list(r) for r in rows]))
     return rows, out
 
@@ -142,5 +143,6 @@ if __name__ == "__main__":
                     help="report the fused speedup without asserting the "
                          f">= {FUSED_GATE_X}x gate")
     args = ap.parse_args()
-    rows, _ = run(interpret=args.interpret, gate=not args.no_gate)
+    rows, _ = run(interpret=args.interpret, gate=not args.no_gate,
+                  cli_args=vars(args))
     common.emit(rows)

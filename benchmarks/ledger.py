@@ -1,0 +1,261 @@
+"""Bench regression ledger: normalized run records for the serving and
+kernel benches, appended to two committed files at the repo root —
+``BENCH_SERVE.json`` and ``BENCH_KERNELS.json`` — so every PR carries
+the performance history next to the code and CI can diff a fresh run
+against it (scripts/bench_diff.py).
+
+Schema (``repro-bench-ledger/v1``): a ledger file is
+
+    {"schema": "repro-bench-ledger/v1", "suite": "serve" | "kernels",
+     "runs": [record, ...]}
+
+and each record is
+
+    {"meta": {git_sha, jax_version, platform, device_kind, n_devices,
+              created_at, args},                # benchmarks/common.run_meta
+     "series": {name: {"value": float, "unit": str,
+                       "clock": "virtual" | "wall",
+                       "direction": "lower" | "higher",
+                       "tol": float}}}          # tol = relative tolerance
+
+The ``clock`` field is the noise contract: ``virtual`` series (engine
+steps, admission-wait steps, weight bytes) are deterministic functions
+of the policy/packing — identical on every machine — so the CI lane
+GATES on them with their per-series ``tol``; ``wall`` series (tok/s,
+microsecond timings) are report-only, because a shared CI runner can be
+arbitrarily slow.  ``direction`` says which way is better, so a diff
+can tell a regression from an improvement.
+
+Running the suite (pinned small workloads, CPU-sized):
+
+    PYTHONPATH=src python -m benchmarks.ledger            # candidates
+    PYTHONPATH=src python -m benchmarks.ledger --update   # append to the
+                                                          # repo-root files
+
+Without ``--update`` the fresh records land as one-run candidate
+ledgers in ``artifacts/bench/BENCH_*.candidate.json`` — what the CI
+perf lane diffs against the committed baselines.  ``--update`` is the
+maintainer action after an intentional perf change: append the new
+record to the committed files and check them in.
+
+Also a suite entry: ``python -m benchmarks.run --only ledger``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):  # script mode: python benchmarks/ledger.py
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+# benchmarks.common (and with it jax) is imported lazily inside the
+# functions that run benches — the schema/load/validate half of this
+# module stays importable from a bare interpreter, which is what lets
+# scripts/bench_diff.py gate CI without touching the ML stack.
+
+LEDGER_SCHEMA = "repro-bench-ledger/v1"
+ROOT = Path(__file__).resolve().parents[1]
+SERVE_LEDGER = ROOT / "BENCH_SERVE.json"
+KERNEL_LEDGER = ROOT / "BENCH_KERNELS.json"
+SUITES = ("serve", "kernels")
+
+#: pinned serve workload for the ledger record — small enough for CI,
+#: bursty enough that scheduling (steps, wait) is non-trivial
+SERVE_ARGS = dict(arch="tiny-160k", num_slots=4, n_requests=12,
+                  rate=4.0, kv_bits=4)
+
+_REQ_SERIES = {"value", "unit", "clock", "direction", "tol"}
+
+
+def make_record(series: dict, meta: dict | None = None) -> dict:
+    if meta is None:
+        from benchmarks import common
+
+        meta = common.run_meta()
+    rec = {"meta": meta, "series": series}
+    validate_record(rec)
+    return rec
+
+
+def validate_record(rec: dict) -> dict:
+    """Schema check for one run record; raises ValueError with the
+    offending key path.  Returns the record for chaining."""
+
+    def fail(msg):
+        raise ValueError(f"ledger record: {msg}")
+
+    if not isinstance(rec, dict):
+        fail(f"expected an object, got {type(rec).__name__}")
+    for key in ("meta", "series"):
+        if key not in rec:
+            fail(f"missing {key!r}")
+    meta = rec["meta"]
+    for key in ("git_sha", "jax_version", "platform", "device_kind",
+                "created_at"):
+        if not isinstance(meta.get(key), str) or not meta.get(key):
+            fail(f"meta.{key} must be a non-empty string")
+    if not isinstance(rec["series"], dict) or not rec["series"]:
+        fail("series must be a non-empty object")
+    for name, s in rec["series"].items():
+        if not isinstance(s, dict):
+            fail(f"series[{name!r}] must be an object")
+        missing = _REQ_SERIES - set(s)
+        if missing:
+            fail(f"series[{name!r}] missing {sorted(missing)}")
+        if not isinstance(s["value"], (int, float)) or s["value"] != s["value"]:
+            fail(f"series[{name!r}].value must be a finite number")
+        if s["clock"] not in ("virtual", "wall"):
+            fail(f"series[{name!r}].clock must be 'virtual' or 'wall', "
+                 f"got {s['clock']!r}")
+        if s["direction"] not in ("lower", "higher"):
+            fail(f"series[{name!r}].direction must be 'lower' or "
+                 f"'higher', got {s['direction']!r}")
+        if not isinstance(s["tol"], (int, float)) or s["tol"] < 0:
+            fail(f"series[{name!r}].tol must be a number >= 0")
+    return rec
+
+
+def load(path) -> dict:
+    """Load + validate a ledger file (every record)."""
+    with open(path) as f:
+        led = json.load(f)
+    if led.get("schema") != LEDGER_SCHEMA:
+        raise ValueError(
+            f"{path}: schema {led.get('schema')!r} != {LEDGER_SCHEMA!r}")
+    if led.get("suite") not in SUITES:
+        raise ValueError(f"{path}: suite must be one of {SUITES}, "
+                         f"got {led.get('suite')!r}")
+    runs = led.get("runs")
+    if not isinstance(runs, list) or not runs:
+        raise ValueError(f"{path}: runs must be a non-empty list")
+    for i, rec in enumerate(runs):
+        try:
+            validate_record(rec)
+        except ValueError as e:
+            raise ValueError(f"{path}: runs[{i}]: {e}") from e
+    return led
+
+
+def write(path, suite: str, runs: list) -> Path:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(
+        {"schema": LEDGER_SCHEMA, "suite": suite, "runs": runs},
+        indent=1, default=float) + "\n")
+    return p
+
+
+def append(path, record: dict, suite: str) -> Path:
+    """Append one validated record to a ledger file (created if absent)."""
+    validate_record(record)
+    p = Path(path)
+    runs = load(p)["runs"] if p.exists() else []
+    runs.append(record)
+    return write(p, suite, runs)
+
+
+def _s(value, unit, clock, direction, tol=0.0) -> dict:
+    return {"value": float(value), "unit": unit, "clock": clock,
+            "direction": direction, "tol": float(tol)}
+
+
+def serve_series(stats: dict, kv_bits: int = 4) -> dict:
+    """Normalize a serve_bench.run() stats dict into ledger series.
+    Virtual series carry tol=0 where they are exact (step counts, byte
+    ratios) and a small relative tol where backend numerics enter (the
+    logit gap can drift across jax/XLA point releases)."""
+    b = kv_bits
+    series = {
+        f"serve.kv{b}_steps":
+            _s(stats[f"kv{b}_steps"], "engine_steps", "virtual", "lower"),
+        f"serve.kv{b}_mean_latency_steps":
+            _s(stats[f"kv{b}_mean_latency_steps"], "engine_steps",
+               "virtual", "lower"),
+        f"serve.kv{b}_batch_fill":
+            _s(stats[f"kv{b}_batch_fill"], "frac", "virtual", "higher",
+               tol=1e-6),
+        f"serve.kv{b}_bytes_ratio":
+            _s(stats[f"kv{b}_ratio"], "x_vs_kv16", "virtual", "higher"),
+        f"serve.kv{b}_logit_gap":
+            _s(stats[f"kv{b}_logit_gap"], "abs_logit", "virtual", "lower",
+               tol=0.25),
+        f"serve.tok_s_kv{b}":
+            _s(stats[f"tok_s_kv{b}"], "tok_per_s", "wall", "higher"),
+        f"serve.kv{b}_ttft_p99_ms":
+            _s(stats[f"kv{b}_ttft_p99_ms"], "ms", "wall", "lower"),
+        f"serve.kv{b}_itl_p50_ms":
+            _s(stats[f"kv{b}_itl_p50_ms"], "ms", "wall", "lower"),
+    }
+    return series
+
+
+def kernel_series(out: dict) -> dict:
+    """Normalize a kernel_bench.run() result dict into ledger series:
+    the bytes contract per quant tag is exact (virtual); the measured
+    timings and speedups are wall."""
+    series = {}
+    for tag, r in sorted(out["fused"].items()):
+        series[f"kernel.{tag}_weight_bytes"] = _s(
+            r["weight_bytes"], "bytes", "virtual", "lower")
+        series[f"kernel.{tag}_bytes_vs_bf16"] = _s(
+            r["bytes_vs_bf16"], "frac", "virtual", "lower")
+        series[f"kernel.{tag}_speedup"] = _s(
+            r["speedup"], "x", "wall", "higher")
+        series[f"kernel.{tag}_us_fused"] = _s(
+            r["us_fused"], "us", "wall", "lower")
+    return series
+
+
+def run(log=print, *, update: bool = False):
+    """Suite entry (benchmarks/run.py --only ledger): run the pinned
+    serve + kernel workloads, normalize to ledger records, and write
+    candidate ledgers to artifacts/bench/ — or append to the committed
+    repo-root files with update=True."""
+    from benchmarks import common, kernel_bench, serve_bench
+
+    rows = []
+    log("  serve ledger record "
+        + " ".join(f"{k}={v}" for k, v in SERVE_ARGS.items()))
+    _, sstats = serve_bench.run(log, **SERVE_ARGS)
+    srec = make_record(serve_series(sstats, SERVE_ARGS["kv_bits"]),
+                       meta=common.run_meta(SERVE_ARGS))
+    _, kout = kernel_bench.run(log, gate=False)
+    krec = make_record(kernel_series(kout))
+
+    for suite, rec, committed in (("serve", srec, SERVE_LEDGER),
+                                  ("kernels", krec, KERNEL_LEDGER)):
+        if update:
+            p = append(committed, rec, suite)
+        else:
+            p = write(common.ART / "bench" / f"BENCH_{suite.upper()}"
+                      ".candidate.json", suite, [rec])
+        nv = sum(s["clock"] == "virtual" for s in rec["series"].values())
+        log(f"  {suite}: {len(rec['series'])} series ({nv} virtual/gated) "
+            f"-> {p}")
+        rows.append((f"ledger/{suite}", 0.0,
+                     f"series={len(rec['series'])};virtual={nv};"
+                     f"out={p.name}"))
+    return rows, {"serve": srec, "kernels": krec}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run the pinned bench workloads and record them in "
+                    "the regression ledger"
+    )
+    ap.add_argument("--update", action="store_true",
+                    help="append the fresh records to the committed "
+                         "repo-root BENCH_SERVE.json / BENCH_KERNELS.json "
+                         "(default: write one-run candidate ledgers to "
+                         "artifacts/bench/ for scripts/bench_diff.py)")
+    args = ap.parse_args(argv)
+    run(log=lambda *a: print(*a, file=sys.stderr, flush=True),
+        update=args.update)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3dt,fig3bs,fig4,table1,appb,"
-                         "kernel,roofline,serve,figmix,plan")
+                         "kernel,roofline,serve,figmix,plan,ledger")
     ap.add_argument("--all", action="store_true",
                     help="run every suite (the default when --only is unset; "
                          "spelled out for scripts/CI)")
@@ -30,7 +30,8 @@ def main() -> None:
         ap.error("--all and --only are mutually exclusive")
     from benchmarks import (appb_centering, fig2_bitlevel, fig3_blocksize,
                             fig3_datatypes, fig4_proxy, fig_mixed_frontier,
-                            kernel_bench, roofline, serve_bench, table1_gptq)
+                            kernel_bench, ledger, roofline, serve_bench,
+                            table1_gptq)
 
     suites = {
         "fig2": fig2_bitlevel.run,
@@ -44,6 +45,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "figmix": fig_mixed_frontier.run,
         "plan": fig_mixed_frontier.run_plan,
+        "ledger": ledger.run,
     }
     wanted = ([n for n in args.only.split(",") if n] if args.only
               else list(suites))

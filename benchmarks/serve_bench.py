@@ -180,7 +180,7 @@ def _class_latency(reqs, marks) -> dict:
 
 def run_sla(log=print, *, arch="tiny-160k", num_slots=4, n_requests=24,
             kv_bits=4, prefill_chunk=16, max_preemptions=2, seed=0,
-            json_out=None):
+            json_out=None, cli_args=None):
     """FIFO vs SLA-aware scheduling on the two-class bursty trace
     (data/synthetic.two_class_workload): a burst of long low-priority
     requests fills the pool, short high-priority requests trickle in
@@ -330,14 +330,16 @@ def run_sla(log=print, *, arch="tiny-160k", num_slots=4, n_requests=24,
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(
             {"arch": arch, "num_slots": num_slots,
-             "n_requests": n_requests, **stats}, indent=2))
+             "n_requests": n_requests,
+             "meta": common.run_meta(cli_args), **stats}, indent=2))
         log(f"  stats -> {path}")
     return rows, stats
 
 
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         rate=4.0, max_new_range=(8, 48), quantized=True, seed=0,
-        kv_bits=None, matmul_mode="auto", mesh_spec=None, json_out=None):
+        kv_bits=None, matmul_mode="auto", mesh_spec=None, json_out=None,
+        cli_args=None):
     """kv_bits: None sweeps {16, 8, 4}; an int benches that precision
     (16-bit KV bytes are still measured for the reduction ratio).
     matmul_mode picks the QuantizedTensor dispatch for BOTH paths
@@ -409,6 +411,13 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         out_c, dt_c, cstats = common.compile_warm(_pass_c)
         tps_c = total_tokens / dt_c
         lat_c, lat_c_str = _latency_columns(tel)
+        # virtual-clock columns: engine steps for the trace and mean
+        # request latency in steps — deterministic functions of the
+        # scheduling policy (no EOS in the bench workload, so token
+        # values cannot move them), which makes them the series the
+        # regression ledger gates on (benchmarks/ledger.py)
+        stats[f"kv{bits}_steps"] = cstats["steps"]
+        stats[f"kv{bits}_mean_latency_steps"] = cstats["mean_latency_steps"]
 
         if mesh is not None:
             # sequence sharding must actually shrink what one chip holds:
@@ -519,7 +528,8 @@ def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(
             {"arch": arch, "num_slots": num_slots,
-             "n_requests": n_requests, **stats}, indent=2))
+             "n_requests": n_requests,
+             "meta": common.run_meta(cli_args), **stats}, indent=2))
         log(f"  stats -> {path}")
     return rows, stats
 
@@ -564,11 +574,12 @@ if __name__ == "__main__":
                 n_requests=args.num_requests if args.num_requests is not None
                 else 24,
                 kv_bits=args.kv_bits if args.kv_bits is not None else 4,
-                json_out=args.json_out)
+                json_out=args.json_out, cli_args=vars(args))
     else:
         run(arch=args.arch,
             num_slots=args.num_slots if args.num_slots is not None else 8,
             n_requests=args.num_requests if args.num_requests is not None
             else 48,
             kv_bits=args.kv_bits, matmul_mode=args.matmul_mode,
-            mesh_spec=args.mesh, json_out=args.json_out)
+            mesh_spec=args.mesh, json_out=args.json_out,
+            cli_args=vars(args))

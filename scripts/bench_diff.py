@@ -1,0 +1,197 @@
+"""Noise-aware bench-ledger diff: the CI perf-regression gate.
+
+Compares two ``repro-bench-ledger/v1`` files (benchmarks/ledger.py) and
+fails loudly — exit 1 with REGRESSION lines — when a tracked series got
+worse.  The noise contract lives in the ledger itself:
+
+* ``clock: "virtual"`` series are deterministic (engine steps,
+  admission-wait steps, packed weight bytes) — these GATE, each within
+  its own relative tolerance band (``tol``; 0 for exact integers, small
+  for backend-numeric floats like the kv logit gap).
+* ``clock: "wall"`` series are measured on whatever machine ran the
+  bench — these are REPORTED (delta %) but never gate, because a slow
+  shared runner is not a regression.  Baseline wall values are
+  aggregated over the fastest half of the baseline runs (the same
+  noise-only-adds-time estimator as benchmarks/common.timed_robust).
+
+Modes:
+
+    python scripts/bench_diff.py --baseline BENCH_SERVE.json \
+        --new artifacts/bench/BENCH_SERVE.candidate.json [--report r.txt]
+    python scripts/bench_diff.py        # self-check: last vs prior runs
+                                        # of both committed ledgers
+
+In both modes the comparison value of a ledger is its LAST run's series
+(candidate files hold exactly one run); baseline wall values pool every
+baseline run.  Exit codes: 0 clean (improvements included), 1 any
+gated regression or an invalid/missing ledger.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import ledger
+
+#: floor for relative comparisons so a 0-valued exact series still
+#: diffs cleanly (0 vs 0) and never divides by zero
+_EPS = 1e-12
+
+
+def _fastest_half(values, direction):
+    """Mean of the better half of the baseline samples — for wall
+    series, where noise only ever pushes values the worse way."""
+    vs = sorted(values, reverse=(direction == "higher"))
+    keep = vs[: max(1, len(vs) // 2 + len(vs) % 2)]
+    return sum(keep) / len(keep)
+
+
+def diff_ledgers(base: dict, new: dict) -> dict:
+    """Compare the last run of `new` against `base`.  Returns
+    {"regressions": [...], "improvements": [...], "lines": [...],
+     "missing": [...]} — lines is the human report."""
+    base_runs = base["runs"]
+    new_series = new["runs"][-1]["series"]
+    base_last = base_runs[-1]["series"]
+    lines, regressions, improvements, missing = [], [], [], []
+
+    for name in sorted(set(base_last) | set(new_series)):
+        b, n = base_last.get(name), new_series.get(name)
+        if n is None:
+            missing.append(name)
+            lines.append(f"MISSING   {name}: tracked in the baseline but "
+                         f"absent from the new run")
+            continue
+        if b is None:
+            lines.append(f"NEW       {name}: {n['value']:.6g} {n['unit']} "
+                         f"(no baseline yet)")
+            continue
+        direction, tol = b["direction"], float(b["tol"])
+        if b["clock"] == "wall":
+            bval = _fastest_half(
+                [r["series"][name]["value"] for r in base_runs
+                 if name in r["series"]], direction)
+        else:
+            bval = b["value"]
+        nval = n["value"]
+        rel = (nval - bval) / max(abs(bval), _EPS)
+        worse = rel > tol if direction == "lower" else rel < -tol
+        better = rel < -_EPS if direction == "lower" else rel > _EPS
+        desc = (f"{name}: {bval:.6g} -> {nval:.6g} {n['unit']} "
+                f"({rel * 100:+.2f}%, want {direction}, tol "
+                f"{tol * 100:g}%)")
+        if b["clock"] == "wall":
+            lines.append(f"wall      {desc}  [report-only]")
+        elif worse:
+            regressions.append(name)
+            lines.append(f"REGRESSION {desc}")
+        elif better:
+            improvements.append(name)
+            lines.append(f"improved  {desc}")
+        else:
+            lines.append(f"ok        {desc}")
+    # a tracked virtual series vanishing IS a gate failure — otherwise
+    # deleting the series would be the easiest way to pass CI
+    regressions.extend(m for m in missing
+                       if base_last[m]["clock"] == "virtual")
+    return {"regressions": regressions, "improvements": improvements,
+            "missing": missing, "lines": lines}
+
+
+def _compare(baseline_path, new_path, out) -> int:
+    try:
+        base = ledger.load(baseline_path)
+        new = ledger.load(new_path)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: {e}", file=sys.stderr)
+        return 1
+    if base["suite"] != new["suite"]:
+        print(f"bench_diff: suite mismatch {base['suite']!r} vs "
+              f"{new['suite']!r}", file=sys.stderr)
+        return 1
+    d = diff_ledgers(base, new)
+    out(f"== {base['suite']}: {Path(new_path).name} vs "
+        f"{Path(baseline_path).name} ({len(base['runs'])} baseline runs) ==")
+    for line in d["lines"]:
+        out("  " + line)
+    n_reg = len(d["regressions"])
+    out(f"  {n_reg} regressions, {len(d['improvements'])} improvements")
+    return 1 if n_reg else 0
+
+
+def _self_check(out) -> int:
+    """No-args mode: within each committed ledger, diff the last run
+    against the runs before it — a sanity check that history itself is
+    consistent.  Single-run ledgers pass trivially."""
+    rc = 0
+    for path in (ledger.SERVE_LEDGER, ledger.KERNEL_LEDGER):
+        if not path.exists():
+            print(f"bench_diff: no ledger at {path}", file=sys.stderr)
+            rc = 1
+            continue
+        try:
+            led = ledger.load(path)
+        except (OSError, ValueError) as e:
+            print(f"bench_diff: {e}", file=sys.stderr)
+            rc = 1
+            continue
+        if len(led["runs"]) < 2:
+            out(f"== {led['suite']}: {path.name} has "
+                f"{len(led['runs'])} run(s); nothing to diff ==")
+            continue
+        prior = dict(led, runs=led["runs"][:-1])
+        d = diff_ledgers(prior, led)
+        out(f"== {led['suite']}: last vs prior {len(prior['runs'])} "
+            f"run(s) of {path.name} ==")
+        for line in d["lines"]:
+            out("  " + line)
+        if d["regressions"]:
+            rc = 1
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two bench-ledger files; exit 1 on any gated "
+                    "(virtual-clock) regression"
+    )
+    ap.add_argument("--baseline", default=None, metavar="LEDGER.json",
+                    help="committed baseline ledger (e.g. BENCH_SERVE.json)")
+    ap.add_argument("--new", default=None, metavar="LEDGER.json",
+                    help="fresh ledger to compare (e.g. the candidate "
+                         "from python -m benchmarks.ledger)")
+    ap.add_argument("--report", default=None, metavar="OUT.txt",
+                    help="also write the report lines to this file "
+                         "(CI uploads it as an artifact)")
+    args = ap.parse_args(argv)
+    if (args.baseline is None) != (args.new is None):
+        ap.error("--baseline and --new go together (omit both for the "
+                 "committed-ledger self-check)")
+
+    report_lines = []
+
+    def out(line):
+        print(line)
+        report_lines.append(line)
+
+    if args.baseline is None:
+        rc = _self_check(out)
+    else:
+        rc = _compare(args.baseline, args.new, out)
+    if rc:
+        out("RESULT: REGRESSION")
+    else:
+        out("RESULT: ok")
+    if args.report:
+        p = Path(args.report)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("\n".join(report_lines) + "\n")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,7 +35,7 @@ from repro.configs import SHAPES, shape_applicable
 from repro.configs.registry import ASSIGNED, get_arch
 from repro.launch import mesh as mesh_mod
 from repro.launch.specs import Skip, build_cell
-from repro.utils.hlo import analyze_hlo
+from repro.utils.hlo import compiled_cost
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
@@ -70,12 +70,11 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, save: bool = True,
         t_compile = time.time() - t0 - t_lower
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
-    hlo_text = compiled.as_text()
-    cost = analyze_hlo(hlo_text)
+    cost = compiled_cost(compiled)
     if hlo_dir:
         Path(hlo_dir).mkdir(parents=True, exist_ok=True)
-        (Path(hlo_dir) / f"{arch}__{shape}__{mesh_name}.hlo").write_text(hlo_text)
+        (Path(hlo_dir) / f"{arch}__{shape}__{mesh_name}.hlo").write_text(
+            compiled.as_text())
 
     cfg = cell["cfg"]
     n_params = cfg.param_count()
@@ -103,13 +102,13 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, save: bool = True,
             + ma.output_size_in_bytes - ma.alias_size_in_bytes,
         ),
         xla_cost=dict(
-            flops=ca.get("flops", 0.0),
-            bytes_accessed=ca.get("bytes accessed", 0.0),
+            flops=cost["xla_flops"],
+            bytes_accessed=cost["xla_bytes_accessed"],
         ),
         hlo_cost=dict(
-            flops_per_device=cost.flops,
-            hbm_bytes_per_device=cost.hbm_bytes,
-            collective_bytes_per_device=cost.collective_bytes,
+            flops_per_device=cost["flops"],
+            hbm_bytes_per_device=cost["hbm_bytes"],
+            collective_bytes_per_device=cost["collective_bytes"],
         ),
     )
     record.update(_roofline(record, mesh.size))

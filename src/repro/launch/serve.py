@@ -39,9 +39,15 @@ Telemetry (docs/observability.md): ``--metrics-out metrics.prom`` and/or
 recording ``Telemetry`` — the serve then prints a p50/p99 TTFT and
 inter-token-latency summary and dumps the Prometheus text exposition /
 the JSONL span trace (validate it with
-``python -m repro.serving.trace trace.jsonl``).  ``--kv-probe-every N``
-additionally measures the append-quantize roundtrip error of every Nth
-admission's K/V rows (continuous mode, quantized cache only).
+``python -m repro.serving.trace trace.jsonl``, or export it to the
+Chrome trace-event format with ``--chrome out.json``).
+``--kv-probe-every N`` additionally measures the append-quantize
+roundtrip error of every Nth admission's K/V rows (continuous mode,
+quantized cache only), and ``--profile`` attaches the step profiler
+(serving/profiler.py): each jitted program is costed once and its
+measured step times attributed against the roofline — a per-program
+summary prints at the end and ``profile_*`` gauges land in the metrics
+dump.
 
 Flag pairings are validated up front: ``--plan`` carries the full weight
 quantization config (conflicts with --bits/--dtype/--block-size/
@@ -68,7 +74,14 @@ from repro.models import lm
 from repro.models.quantize import bits_report, quantize_params, quantize_tree
 from repro.models.sharding import Sharder
 from repro.precision import PrecisionPlan
-from repro.serving import NOOP, Engine, Server, Telemetry, perplexity
+from repro.serving import (
+    NOOP,
+    Engine,
+    Server,
+    StepProfiler,
+    Telemetry,
+    perplexity,
+)
 from repro.serving.telemetry import record_quant_health
 from repro.train import step as step_mod
 
@@ -172,6 +185,13 @@ def validate_flags(args) -> None:
                 "with --num-slots/--num-requests/--max-new (or pass "
                 "--mode static)"
             )
+    if args.profile and args.metrics_out is None and args.trace_out is None:
+        raise SystemExit(
+            "--profile attributes step times against per-program "
+            "FLOP/byte costs into profile_* gauges, but no telemetry "
+            "sink is configured — add --metrics-out (and/or --trace-out) "
+            "or drop --profile"
+        )
     if args.prefill_chunk is not None and args.prefill_chunk < 1:
         raise SystemExit("--prefill-chunk wants a positive chunk length, "
                          f"got {args.prefill_chunk}")
@@ -278,6 +298,12 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="measure the append-quantize roundtrip error of "
                          "every Nth admission's K/V rows (continuous mode; "
                          "needs --kv-bits < 16 and a telemetry sink)")
+    ap.add_argument("--profile", action="store_true",
+                    help="attach the step profiler (serving/profiler.py): "
+                         "cost each jitted program once, attribute its "
+                         "measured step times against the roofline, print "
+                         "a per-program summary and export profile_* "
+                         "gauges (needs a telemetry sink)")
     return ap
 
 
@@ -294,6 +320,8 @@ def _finish_telemetry(tel, args) -> None:
                          f"p99 {h.percentile(99) * 1e3:.1f}ms")
     if parts:
         print("telemetry: " + "; ".join(parts))
+    if tel.profiler is not None:
+        print(tel.profiler.format_summary())
     qerr = tel.registry.gauge("kv_append_qerr_rms")
     if tel.kv_probe_every and qerr.value:
         print(f"kv append-quantize probe: rms {qerr.value:.4f} "
@@ -315,7 +343,8 @@ def main(argv=None):
     if args.metrics_out is not None or args.trace_out is not None:
         telemetry = Telemetry(
             kv_probe_every=args.kv_probe_every
-            if args.kv_probe_every is not None else 0)
+            if args.kv_probe_every is not None else 0,
+            profiler=StepProfiler() if args.profile else None)
 
     cfg = get_arch(args.arch).with_matmul_mode(args.matmul_mode)
     if args.matmul_mode != "auto":

@@ -6,14 +6,22 @@ from repro.serving.engine import (
     sample_token,
 )
 from repro.serving.kvcache import SlotKVCache
+from repro.serving.profiler import StepProfiler
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.server import Server, bucket_len
 from repro.serving.telemetry import NOOP, MetricsRegistry, Telemetry
-from repro.serving.trace import Tracer, validate_events, validate_jsonl
+from repro.serving.trace import (
+    Tracer,
+    to_chrome_trace,
+    trace_stats,
+    validate_events,
+    validate_jsonl,
+)
 
 __all__ = [
     "Engine", "KV_LOGIT_TOL", "kv_oracle_logit_gap", "perplexity",
     "sample_token", "SlotKVCache", "Scheduler", "Request", "Server",
-    "bucket_len", "Telemetry", "MetricsRegistry", "NOOP", "Tracer",
-    "validate_events", "validate_jsonl",
+    "bucket_len", "Telemetry", "MetricsRegistry", "NOOP", "StepProfiler",
+    "Tracer", "to_chrome_trace", "trace_stats", "validate_events",
+    "validate_jsonl",
 ]

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.models import blocks, lm
 from repro.models.sharding import check_decode_capability
+from repro.serving.profiler import null_annotation
 from repro.serving.telemetry import NOOP, record_quant_health, record_tree_bits
 
 #: stated per-token logit tolerance of a k-bit KV cache vs the bf16-cache
@@ -185,6 +186,16 @@ class Engine:
         self._step = jax.jit(step, donate_argnums=(2,))
         self._first = jax.jit(sample_token)
 
+        # optional roofline attribution (serving/profiler.py) — host-side
+        # only; the jitted programs above are identical with it on or off
+        prof = getattr(telemetry, "profiler", None)
+        self._prof = (prof.session(telemetry.registry,
+                                   kv_bits=str(cfg.kv_bits),
+                                   matmul_mode=cfg.matmul_mode)
+                      if telemetry.enabled and prof is not None else None)
+        self._annot = (self._prof.annotation if self._prof is not None
+                       else null_annotation)
+
     def _place_caches(self, caches, batch: int):
         """Move the prefill-produced caches onto their sequence-sharded
         mesh layout so every decode step streams only local KV bytes."""
@@ -201,9 +212,16 @@ class Engine:
         if key is None:
             key = jax.random.PRNGKey(0)
         tel = self.telemetry
+        pf_name = f"prefill[{B}x{S}]"
+        if self._prof is not None:
+            # cost extraction BEFORE t_start so the one-time AOT compile
+            # never pollutes the timed window
+            self._prof.ensure_costed(pf_name, self._prefill,
+                                     (self.params, prompts))
         if tel.enabled:
             t_start = tel.now()
-        logits, caches = self._prefill(self.params, prompts)
+        with self._annot(pf_name):
+            logits, caches = self._prefill(self.params, prompts)
         caches = self._place_caches(caches, B)
         # the first token goes through the same temperature/categorical
         # path as decode steps (it used to be unconditionally greedy)
@@ -214,6 +232,8 @@ class Engine:
             # prefill/step programs are untouched (docs/observability.md)
             jax.block_until_ready(tok)
             t_tok = tel.now()
+            if self._prof is not None:
+                self._prof.observe(pf_name, t_tok - t_start)
             tel.observe("serve_prefill_seconds", t_tok - t_start)
             tel.observe("serve_ttft_seconds", t_tok - t_start)
             tel.inc("serve_prefills_total")
@@ -222,17 +242,22 @@ class Engine:
                      slot=-1, prompt_len=S, padded_len=S)
         done = (tok == self.eos_id) if self.eos_id is not None else jnp.zeros((B,), bool)
         out = [tok]
+        ds_name = f"decode_step[{B}]"
         for t in range(1, max_new_tokens):
             key, sub = jax.random.split(key)
+            ds_args = (self.params, tok, caches, jnp.int32(S + t - 1), sub,
+                       jnp.float32(temperature), done)
+            if self._prof is not None:
+                self._prof.ensure_costed(ds_name, self._step, ds_args)
             if tel.enabled:
                 t0 = tel.now()
-            tok, caches, done = self._step(
-                self.params, tok, caches, jnp.int32(S + t - 1), sub,
-                jnp.float32(temperature), done,
-            )
+            with self._annot(ds_name):
+                tok, caches, done = self._step(*ds_args)
             if tel.enabled:
                 jax.block_until_ready(tok)
                 t1 = tel.now()
+                if self._prof is not None:
+                    self._prof.observe(ds_name, t1 - t0)
                 tel.observe("serve_decode_step_seconds", t1 - t0)
                 tel.observe("serve_itl_seconds", t1 - t_tok)
                 t_tok = t1

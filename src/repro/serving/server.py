@@ -77,6 +77,7 @@ from repro.models import blocks, lm
 from repro.models.sharding import check_decode_capability
 from repro.serving.engine import sample_token
 from repro.serving.kvcache import SlotKVCache, scatter_row, workspace_to_row
+from repro.serving.profiler import null_annotation
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.telemetry import (
     NOOP,
@@ -237,6 +238,18 @@ class Server:
             return nxt, caches
 
         self._step = jax.jit(step, donate_argnums=(2,))
+
+        # optional roofline attribution (serving/profiler.py): a private
+        # cost-cache session labelled with this server's quant config, and
+        # the annotation hook dispatch sites wrap.  All host-side — the
+        # jitted programs above are byte-identical with the profiler on.
+        prof = getattr(telemetry, "profiler", None)
+        self._prof = (prof.session(telemetry.registry,
+                                   kv_bits=str(cfg.kv_bits),
+                                   matmul_mode=cfg.matmul_mode)
+                      if telemetry.enabled and prof is not None else None)
+        self._annot = (self._prof.annotation if self._prof is not None
+                       else null_annotation)
 
         if prefill_chunk is not None:
             # dense bf16 workspace config for the chunk K/V (the packed
@@ -429,23 +442,30 @@ class Server:
             padded = np.zeros((1, Sb), dtype=np.int64)
             padded[0, :L] = req.prompt
             self._key, sub = jax.random.split(self._key)
+            pf_args = (self.params, self.pool.caches, jnp.asarray(padded),
+                       jnp.int32(L), jnp.int32(slot), sub,
+                       jnp.float32(req.temperature))
+            pf_name = f"prefill[{Sb}]"
+            if self._prof is not None:
+                # AOT cost extraction happens BEFORE t0 so the one-time
+                # compile never pollutes the timed window
+                self._prof.ensure_costed(pf_name, self._prefill, pf_args)
             if tel.enabled:
                 t0 = tel.now()
                 if req.t_submit is not None:
                     tel.span("queue_wait", req.t_submit, t0,
                              request_id=req.id, step=self.steps,
                              steps=float(self.steps - req.arrival_time))
-            tok, new_pool = self._prefill(
-                self.params, self.pool.caches, jnp.asarray(padded),
-                jnp.int32(L), jnp.int32(slot), sub,
-                jnp.float32(req.temperature),
-            )
+            with self._annot(pf_name):
+                tok, new_pool = self._prefill(*pf_args)
             self.pool.install_prefill(slot, new_pool, L)
             if tel.enabled:
                 # fence at the dispatch boundary: host-side timing only,
                 # the compiled prefill is untouched
                 jax.block_until_ready(tok)
                 t1 = tel.now()
+                if self._prof is not None:
+                    self._prof.observe(pf_name, t1 - t0)
                 tel.observe("serve_prefill_seconds", t1 - t0)
                 tel.observe("serve_prefill_pad_frac", (Sb - L) / Sb)
                 tel.inc("serve_prefills_total")
@@ -546,13 +566,19 @@ class Server:
             C = self._prefill_chunk
             c0 = st.starts[st.next]
             tokens = jnp.asarray(st.padded[:, c0:c0 + C])
+            ck_args = (self.params, st.workspace, tokens, jnp.int32(c0))
+            ck_name = f"prefill_chunk[{st.Sb}]"
+            if self._prof is not None:
+                self._prof.ensure_costed(ck_name, self._chunk_step, ck_args)
             if tel.enabled:
                 t0 = tel.now()
-            h, st.workspace = self._chunk_step(
-                self.params, st.workspace, tokens, jnp.int32(c0))
+            with self._annot(ck_name):
+                h, st.workspace = self._chunk_step(*ck_args)
             if tel.enabled:
                 jax.block_until_ready(h)
                 t1 = tel.now()
+                if self._prof is not None:
+                    self._prof.observe(ck_name, t1 - t0)
                 tel.observe("serve_prefill_chunk_seconds", t1 - t0)
                 tel.inc("serve_prefill_chunks_total")
                 tel.span("prefill_chunk", t0, t1, request_id=st.req.id,
@@ -567,15 +593,21 @@ class Server:
         req = st.req
         tel = self.telemetry
         del self._chunking[slot]
-        tok, new_pool = self._chunk_commit(
-            self.params, self.pool.caches, st.workspace, h,
-            jnp.int32(st.L - 1 - st.starts[-1]), jnp.int32(st.L),
-            jnp.int32(slot), st.key, jnp.float32(req.temperature),
-        )
+        cm_args = (self.params, self.pool.caches, st.workspace, h,
+                   jnp.int32(st.L - 1 - st.starts[-1]), jnp.int32(st.L),
+                   jnp.int32(slot), st.key, jnp.float32(req.temperature))
+        cm_name = f"chunk_commit[{st.Sb}]"
+        if self._prof is not None:
+            self._prof.ensure_costed(cm_name, self._chunk_commit, cm_args)
+        t0c = tel.now() if tel.enabled else 0.0
+        with self._annot(cm_name):
+            tok, new_pool = self._chunk_commit(*cm_args)
         self.pool.install_prefill(slot, new_pool, st.L)
         if tel.enabled:
             jax.block_until_ready(tok)
             t1 = tel.now()
+            if self._prof is not None:
+                self._prof.observe(cm_name, t1 - t0c)
             # the lifecycle-required prefill span covers the whole
             # chunked admission (its prefill_chunk spans nest inside)
             tel.observe("serve_prefill_seconds", t1 - st.t_start)
@@ -607,12 +639,14 @@ class Server:
                             jnp.float32)
         self._key, sub = jax.random.split(self._key)
         tel = self.telemetry
+        ds_args = (self.params, tok, self.pool.caches, pos, sub, temps)
+        if self._prof is not None:
+            self._prof.ensure_costed("decode_step", self._step, ds_args)
         if tel.enabled:
             n_active = self.pool.n_active
             t0 = tel.now()
-        nxt, self.pool.caches = self._step(
-            self.params, tok, self.pool.caches, pos, sub, temps,
-        )
+        with self._annot("decode_step"):
+            nxt, self.pool.caches = self._step(*ds_args)
         if tel.enabled:
             # fence at the dispatch boundary (the np.asarray below would
             # sync anyway; the explicit fence makes the timed quantity
@@ -620,6 +654,8 @@ class Server:
             jax.block_until_ready(nxt)
             t1 = tel.now()
             fill = n_active / self.pool.num_slots
+            if self._prof is not None:
+                self._prof.observe("decode_step", t1 - t0)
             tel.observe("serve_decode_step_seconds", t1 - t0)
             tel.observe("serve_batch_fill", fill)
             tel.inc("serve_decode_steps_total")

@@ -146,6 +146,27 @@ METRIC_FAMILIES = {
     "quant_unit_qerr_rms":
         ("gauge", "blockwise RMS relative quantization error of one matrix "
          "at load; unit=<tree path>", None),
+    # step profiler: roofline attribution per jitted program
+    # (serving/profiler.py; labels program=<name>, kv_bits, matmul_mode)
+    "profile_step_seconds":
+        ("histogram", "one profiled program dispatch (host fence to "
+         "fence); program=<jitted program>", LATENCY_BUCKETS),
+    "profile_program_flops":
+        ("gauge", "analytic FLOPs per call of one jitted program "
+         "(trip-count-corrected HLO walk, utils/hlo.py)", None),
+    "profile_program_hbm_bytes":
+        ("gauge", "analytic HBM bytes per call of one jitted program "
+         "(fusion-boundary traffic)", None),
+    "profile_achieved_flops_per_s":
+        ("gauge", "program FLOPs / fastest-half mean measured step time",
+         None),
+    "profile_achieved_hbm_gbps":
+        ("gauge", "program HBM GB / fastest-half mean measured step time",
+         None),
+    "profile_roofline_frac":
+        ("gauge", "roofline-predicted step time (binding compute/memory "
+         "term at the configured peaks) / measured fastest-half time; "
+         "1.0 = hardware limit", None),
 }
 
 
@@ -336,15 +357,19 @@ class MetricsRegistry:
 
     def prometheus_text(self) -> str:
         """Prometheus text exposition format (type + help comments,
-        cumulative `le` buckets, _sum/_count)."""
+        cumulative `le` buckets, _sum/_count).  HELP text comes from the
+        METRIC_FAMILIES declaration (the single source of truth) and
+        label values are escaped per the exposition-format spec
+        (backslash, double quote, newline)."""
         lines: list[str] = []
         for name, (typ, help_, series) in sorted(self._metrics.items()):
+            decl = METRIC_FAMILIES.get(name)
+            help_ = decl[1] if decl else help_
             if help_:
-                lines.append(f"# HELP {name} {help_}")
+                lines.append(f"# HELP {name} " + _escape_help(help_))
             lines.append(f"# TYPE {name} {typ}")
             for key, m in sorted(series.items()):
-                lbl = "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}" \
-                    if key else ""
+                lbl = _render_labels(key)
                 if typ in ("counter", "gauge"):
                     lines.append(f"{name}{lbl} {m.value:.9g}")
                 else:
@@ -360,9 +385,27 @@ class MetricsRegistry:
         return "\n".join(lines) + "\n"
 
 
+def _escape_label_value(v: str) -> str:
+    """Exposition-format label-value escaping: backslash first, then
+    double quote and newline (the three characters the spec names)."""
+    return v.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+
+
+def _escape_help(h: str) -> str:
+    """HELP lines escape backslash and newline (quotes are legal)."""
+    return h.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _render_labels(pairs) -> str:
+    if not pairs:
+        return ""
+    return ("{"
+            + ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in pairs)
+            + "}")
+
+
 def _merge_label(key: tuple, k: str, v: str) -> str:
-    pairs = list(key) + [(k, v)]
-    return "{" + ",".join(f'{a}="{b}"' for a, b in pairs) + "}"
+    return _render_labels(list(key) + [(k, v)])
 
 
 # ---------------------------------------------------------------------------
@@ -382,12 +425,16 @@ class Telemetry:
     enabled = True
 
     def __init__(self, *, kv_probe_every: int = 0,
-                 max_trace_events: int | None = None):
+                 max_trace_events: int | None = None, profiler=None):
         from repro.serving.trace import Tracer  # sibling, no cycle at import
 
         self.registry = MetricsRegistry()
         self.tracer = Tracer(max_events=max_trace_events)
         self.kv_probe_every = int(kv_probe_every)
+        #: optional serving/profiler.StepProfiler: the Server/Engine open
+        #: a session on it and attribute their measured step times into
+        #: the profile_* gauge families (host-side only, like the rest)
+        self.profiler = profiler
 
     # host wall clock — one place, mockable in tests
     now = staticmethod(time.perf_counter)
@@ -442,6 +489,7 @@ class NoopTelemetry:
     kv_probe_every = 0
     registry = None
     tracer = None
+    profiler = None
     now = staticmethod(time.perf_counter)
 
     inc = set_gauge = observe = span = event = staticmethod(_noop)

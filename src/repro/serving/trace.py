@@ -51,9 +51,20 @@ exactly one submit, retire after submit, retired requests prefilled, and
 the v2 preemption counting rules — preempt only after prefill and never
 nested, at most one spill per preempt, restore only after a matching
 spill, no token/retire while preempted (preempts > restores).
-Run as a module to validate a written trace (the CI telemetry smoke):
+A flight-recorder trace (``Tracer(max_events=N)``) that dropped its
+oldest events exports a leading ``truncated`` event
+(``attrs.dropped = N``); validation REFUSES such a trace with a clear
+"truncated" diagnostic instead of a confusing lifecycle error about a
+request whose submit fell off the head.
 
-    PYTHONPATH=src python -m repro.serving.trace artifacts/trace.jsonl
+Run as a module to validate a written trace (the CI telemetry smoke);
+``--stats`` adds per-family counts and a per-request duration summary,
+``--chrome out.json`` converts the trace to Chrome trace-event JSON
+(per-request tracks, an engine-step track, preempt->restore flow
+arrows) loadable in Perfetto / chrome://tracing:
+
+    PYTHONPATH=src python -m repro.serving.trace artifacts/trace.jsonl \
+        [--stats] [--chrome out.json]
 """
 
 from __future__ import annotations
@@ -65,7 +76,7 @@ TRACE_VERSION = 2
 
 SPAN_NAMES = {"queue_wait", "prefill", "prefill_chunk", "decode_step",
               "spill", "restore"}
-EVENT_NAMES = {"submit", "token", "preempt", "retire"}
+EVENT_NAMES = {"submit", "token", "preempt", "retire", "truncated"}
 
 _REQUIRED_KEYS = {"v", "kind", "name", "request_id", "t0", "t1", "step",
                   "attrs"}
@@ -107,11 +118,28 @@ class Tracer:
             "step": None if step is None else int(step), "attrs": attrs,
         })
 
+    def export_events(self) -> list[dict]:
+        """The events as a consumer should see them: when the flight
+        recorder dropped the head, a leading ``truncated`` marker event
+        (attrs.dropped) records the loss — so validation fails with a
+        clear "truncated" diagnostic instead of a baffling lifecycle
+        error about a request whose submit fell off the window."""
+        if not self.dropped:
+            return list(self.events)
+        t0 = self.events[0]["t0"] if self.events else 0.0
+        marker = {
+            "v": TRACE_VERSION, "kind": "event", "name": "truncated",
+            "request_id": None, "t0": float(t0), "t1": None, "step": None,
+            "attrs": {"dropped": self.dropped,
+                      "max_events": self.max_events},
+        }
+        return [marker] + list(self.events)
+
     def write_jsonl(self, path) -> Path:
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         with open(p, "w") as f:
-            for ev in self.events:
+            for ev in self.export_events():
                 f.write(json.dumps(ev) + "\n")
         return p
 
@@ -142,6 +170,13 @@ def validate_events(events) -> dict:
             _fail(i, f"schema version {ev['v']!r} (this build reads "
                      f"{TRACE_VERSION})")
         kind, name = ev["kind"], ev["name"]
+        if name == "truncated":
+            n = ev.get("attrs", {}).get("dropped", "?")
+            _fail(i, f"trace is truncated: the flight recorder dropped "
+                     f"its {n} oldest events (Tracer max_events="
+                     f"{ev.get('attrs', {}).get('max_events', '?')}); "
+                     f"lifecycle validation needs the complete trace — "
+                     f"raise max_events or trace a shorter serve")
         if kind == "span":
             if name not in SPAN_NAMES:
                 _fail(i, f"unknown span name {name!r}")
@@ -231,9 +266,8 @@ def validate_events(events) -> dict:
             "spans": n_spans, "decode_steps": n_steps}
 
 
-def validate_jsonl(path) -> dict:
-    """Parse + validate a JSONL trace file; returns validate_events'
-    summary plus the path."""
+def load_jsonl(path) -> list[dict]:
+    """Parse a JSONL trace file into event dicts (no validation)."""
     events = []
     with open(path) as f:
         for ln, line in enumerate(f, 1):
@@ -244,23 +278,185 @@ def validate_jsonl(path) -> dict:
                 events.append(json.loads(line))
             except json.JSONDecodeError as e:
                 raise ValueError(f"{path}:{ln}: not valid JSON: {e}") from e
-    stats = validate_events(events)
+    return events
+
+
+def validate_jsonl(path) -> dict:
+    """Parse + validate a JSONL trace file; returns validate_events'
+    summary plus the path."""
+    stats = validate_events(load_jsonl(path))
     stats["path"] = str(path)
     return stats
 
 
+# ---------------------------------------------------------------------------
+# stats + Chrome trace-event export
+# ---------------------------------------------------------------------------
+
+def trace_stats(events) -> dict:
+    """Descriptive statistics of a (validated) trace: per-family
+    span/event counts and a per-request duration summary (submit to
+    retire, wall seconds) — what ``--stats`` prints."""
+    events = list(events)
+    names: dict[str, int] = {}
+    req: dict = {}
+    for ev in events:
+        key = f"{ev['kind']}:{ev['name']}"
+        names[key] = names.get(key, 0) + 1
+        rid = ev["request_id"]
+        if rid is None:
+            continue
+        r = req.setdefault(rid, {"submit": None, "retire": None,
+                                 "tokens": 0})
+        if ev["name"] == "submit":
+            r["submit"] = ev["t0"]
+        elif ev["name"] == "retire":
+            r["retire"] = ev["t0"]
+            r["n_tokens"] = ev["attrs"].get("n_tokens")
+        elif ev["name"] == "token":
+            r["tokens"] += 1
+    durs = sorted(r["retire"] - r["submit"] for r in req.values()
+                  if r["submit"] is not None and r["retire"] is not None)
+
+    def _pct(p):
+        if not durs:
+            return float("nan")
+        idx = min(len(durs) - 1, int(round((len(durs) - 1) * p / 100.0)))
+        return durs[idx]
+
+    return {
+        "names": dict(sorted(names.items())),
+        "requests": {
+            "count": len(req),
+            "completed": len(durs),
+            "duration_mean_s": sum(durs) / len(durs) if durs
+            else float("nan"),
+            "duration_p50_s": _pct(50),
+            "duration_p99_s": _pct(99),
+            "duration_max_s": durs[-1] if durs else float("nan"),
+        },
+    }
+
+
+#: Chrome trace-event pid of the engine track / the per-request tracks
+_ENGINE_PID, _REQUEST_PID = 1, 2
+
+
+def to_chrome_trace(events) -> dict:
+    """Convert schema-v2 trace events to Chrome trace-event JSON
+    (the Perfetto / chrome://tracing format).
+
+    Layout: one "engine" process holding the batched engine-step track
+    (decode_step spans and any request-less work), one "requests"
+    process with one thread per request id (its queue_wait / prefill /
+    spill / restore spans and submit / token / preempt / retire instant
+    events).  Each preemption draws a flow arrow from the victim's
+    preempt instant to the start of its restore span, so the eviction
+    round-trip PR 7 built is one visible arc.  Timestamps are
+    microseconds rebased to the earliest event."""
+    events = list(events)
+    t_origin = min((ev["t0"] for ev in events
+                    if isinstance(ev.get("t0"), (int, float))), default=0.0)
+
+    def us(t):
+        return (t - t_origin) * 1e6
+
+    out = [
+        {"ph": "M", "pid": _ENGINE_PID, "tid": 0, "ts": 0,
+         "name": "process_name", "args": {"name": "engine"}},
+        {"ph": "M", "pid": _ENGINE_PID, "tid": 0, "ts": 0,
+         "name": "thread_name", "args": {"name": "engine steps"}},
+        {"ph": "M", "pid": _REQUEST_PID, "tid": 0, "ts": 0,
+         "name": "process_name", "args": {"name": "requests"}},
+    ]
+    seen_rids: set = set()
+    n_preempts: dict = {}
+    n_restores: dict = {}
+    for ev in events:
+        rid = ev["request_id"]
+        if rid is None:
+            pid, tid = _ENGINE_PID, 0
+        else:
+            pid, tid = _REQUEST_PID, int(rid)
+            if rid not in seen_rids:
+                seen_rids.add(rid)
+                out.append({"ph": "M", "pid": pid, "tid": tid, "ts": 0,
+                            "name": "thread_name",
+                            "args": {"name": f"req {rid}"}})
+        args = dict(ev["attrs"], step=ev["step"])
+        base = {"name": ev["name"], "cat": "serve", "pid": pid, "tid": tid,
+                "args": args}
+        if ev["kind"] == "span":
+            out.append(dict(base, ph="X", ts=us(ev["t0"]),
+                            dur=max(0.0, (ev["t1"] - ev["t0"]) * 1e6)))
+            if ev["name"] == "restore":
+                n = n_restores[rid] = n_restores.get(rid, 0) + 1
+                out.append({"ph": "f", "bp": "e", "cat": "preempt",
+                            "name": "preemption",
+                            "id": f"preempt-{rid}-{n}", "pid": pid,
+                            "tid": tid, "ts": us(ev["t0"])})
+        else:
+            out.append(dict(base, ph="i", s="t", ts=us(ev["t0"])))
+            if ev["name"] == "preempt":
+                n = n_preempts[rid] = n_preempts.get(rid, 0) + 1
+                out.append({"ph": "s", "cat": "preempt",
+                            "name": "preemption",
+                            "id": f"preempt-{rid}-{n}", "pid": pid,
+                            "tid": tid, "ts": us(ev["t0"])})
+    return {"traceEvents": out, "displayTimeUnit": "ms",
+            "otherData": {"source": "repro.serving.trace",
+                          "trace_version": TRACE_VERSION}}
+
+
+def write_chrome_trace(events, path) -> Path:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(to_chrome_trace(events)))
+    return p
+
+
 def main(argv=None) -> int:
     import argparse
+    import sys
 
     ap = argparse.ArgumentParser(
-        description="validate a serving trace JSONL against the span schema"
+        description="validate a serving trace JSONL against the span "
+                    "schema; optionally print stats or export a Chrome "
+                    "trace (Perfetto / chrome://tracing)"
     )
     ap.add_argument("trace", help="path to a --trace-out JSONL file")
+    ap.add_argument("--stats", action="store_true",
+                    help="also print per-family span/event counts and a "
+                         "per-request duration summary")
+    ap.add_argument("--chrome", default=None, metavar="OUT.json",
+                    help="also export the trace as Chrome trace-event "
+                         "JSON (per-request tracks, engine-step track, "
+                         "preempt->restore flow arrows)")
     args = ap.parse_args(argv)
-    stats = validate_jsonl(args.trace)
+    try:
+        events = load_jsonl(args.trace)
+        stats = validate_events(events)
+    except (OSError, ValueError) as e:
+        print(f"invalid trace: {e}", file=sys.stderr)
+        return 1
     print(f"ok: {stats['events']} events, {stats['requests']} requests, "
           f"{stats['spans']} spans ({stats['decode_steps']} decode steps) "
-          f"in {stats['path']}")
+          f"in {args.trace}")
+    if args.stats:
+        ts = trace_stats(events)
+        for key, n in ts["names"].items():
+            print(f"  {key:<24s} {n:>7d}")
+        r = ts["requests"]
+        print(f"  requests: {r['count']} ({r['completed']} completed), "
+              f"duration mean {r['duration_mean_s'] * 1e3:.1f}ms "
+              f"p50 {r['duration_p50_s'] * 1e3:.1f}ms "
+              f"p99 {r['duration_p99_s'] * 1e3:.1f}ms "
+              f"max {r['duration_max_s'] * 1e3:.1f}ms")
+    if args.chrome:
+        p = write_chrome_trace(events, args.chrome)
+        n = len(to_chrome_trace(events)["traceEvents"])
+        print(f"chrome trace -> {p} ({n} trace events; open in Perfetto "
+              f"or chrome://tracing)")
     return 0
 
 

@@ -210,6 +210,33 @@ class HloCost:
                        self.collective_bytes * k)
 
 
+def compiled_cost(compiled) -> dict:
+    """Both cost views of one ``jitted.lower(...).compile()`` artifact:
+    XLA's own ``cost_analysis()`` (which counts while-bodies ONCE) next
+    to the trip-count-corrected hierarchical HLO walk below.
+
+    The ``flops``/``hbm_bytes``/``collective_bytes`` keys are the
+    corrected per-device numbers consumers should attribute against
+    (launch/dryrun.py manifests, serving/profiler.py roofline gauges);
+    ``xla_flops``/``xla_bytes_accessed`` are kept for cross-checking.
+    When the HLO walk finds nothing (unexpected text format), the
+    corrected keys fall back to XLA's — attribution degrades to
+    uncorrected rather than to zero."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
+    cost = analyze_hlo(compiled.as_text())
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    return {
+        "flops": cost.flops or xla_flops,
+        "hbm_bytes": cost.hbm_bytes or xla_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "xla_flops": xla_flops,
+        "xla_bytes_accessed": xla_bytes,
+    }
+
+
 def analyze_hlo(hlo_text: str, entry: str | None = None) -> HloCost:
     comps = _parse_computations(hlo_text)
     if not comps:

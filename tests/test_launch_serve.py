@@ -63,6 +63,8 @@ def _args(*argv):
     # preemption needs >= 2 classes to ever find a victim
     (("--max-preemptions", "2"), "--priorities"),
     (("--max-preemptions", "2", "--priorities", "1"), "--priorities"),
+    # the profiler's gauges need a telemetry sink to land in
+    (("--profile",), "--profile"),
 ])
 def test_conflicting_flags_rejected(argv, needle):
     with pytest.raises(SystemExit, match=needle):
@@ -92,6 +94,9 @@ def test_mesh_flag_validated():
     ("--prefill-chunk", "16", "--priorities", "3", "--max-preemptions", "1",
      "--kv-bits", "4"),
     ("--max-preemptions", "0"),
+    ("--profile", "--metrics-out", "m.prom"),
+    ("--profile", "--trace-out", "t.jsonl"),
+    ("--mode", "static", "--profile", "--metrics-out", "m.prom"),
 ])
 def test_legal_flag_combinations_validate(argv):
     serve_mod.validate_flags(_args(*argv))
@@ -144,6 +149,25 @@ def test_flag_matrix_serves(argv, tiny_plan, capsys):
     serve_mod.main(full)
     out = capsys.readouterr().out
     assert ("tok/s" in out) or ("generated" in out), out
+
+
+@pytest.mark.slow
+def test_profile_flag_serves_with_roofline_gauges(tmp_path, capsys):
+    """--profile end to end through the launcher: the serve must print
+    the roofline summary and the metrics dump must carry the profile_*
+    gauge families (the CI telemetry smoke greps the same)."""
+    mpath = tmp_path / "m.prom"
+    serve_mod.main(["--arch", "tiny-160k", "--mode", "continuous",
+                    "--kv-bits", "4", "--num-requests", "3",
+                    "--num-slots", "2", "--max-new", "4", "--profile",
+                    "--metrics-out", str(mpath)])
+    out = capsys.readouterr().out
+    assert "profiler (" in out and "decode_step" in out, out
+    text = mpath.read_text()
+    for fam in ("profile_program_flops", "profile_roofline_frac",
+                "profile_step_seconds_bucket"):
+        assert fam in text, fam
+    assert 'kv_bits="4"' in text
 
 
 @pytest.mark.slow
