@@ -67,6 +67,12 @@ SUITES = ("serve", "kernels")
 SERVE_ARGS = dict(arch="tiny-160k", num_slots=4, n_requests=12,
                   rate=4.0, kv_bits=4)
 
+#: pinned shared-prefix workload for the paged-KV series (serve_bench.
+#: run_paged): the equal-HBM residency win and peak-bytes ratio are
+#: deterministic functions of the trace, so they gate
+PAGED_ARGS = dict(arch="tiny-160k", num_slots=4, n_requests=12,
+                  rate=4.0, kv_bits=4, page_size=8)
+
 _REQ_SERIES = {"value", "unit", "clock", "direction", "tol"}
 
 
@@ -192,6 +198,24 @@ def serve_series(stats: dict, kv_bits: int = 4) -> dict:
     return series
 
 
+def paged_series(stats: dict) -> dict:
+    """Normalize a serve_bench.run_paged() stats dict: the residency and
+    byte-ratio wins at equal HBM are exact virtual series (deterministic
+    COW arithmetic on a pinned trace); paged tok/s is wall/report."""
+    return {
+        "serve.paged_slots_resident":
+            _s(stats["paged_slots_resident"], "sequences", "virtual",
+               "higher"),
+        "serve.paged_bytes_ratio":
+            _s(stats["paged_bytes_ratio"], "frac_of_slot_bytes", "virtual",
+               "lower"),
+        "serve.paged_steps":
+            _s(stats["paged_steps"], "engine_steps", "virtual", "lower"),
+        "serve.tok_s_paged":
+            _s(stats["tok_s_paged"], "tok_per_s", "wall", "higher"),
+    }
+
+
 def kernel_series(out: dict) -> dict:
     """Normalize a kernel_bench.run() result dict into ledger series:
     the bytes contract per quant tag is exact (virtual); the measured
@@ -220,8 +244,14 @@ def run(log=print, *, update: bool = False):
     log("  serve ledger record "
         + " ".join(f"{k}={v}" for k, v in SERVE_ARGS.items()))
     _, sstats = serve_bench.run(log, **SERVE_ARGS)
-    srec = make_record(serve_series(sstats, SERVE_ARGS["kv_bits"]),
-                       meta=common.run_meta(SERVE_ARGS))
+    log("  paged ledger record "
+        + " ".join(f"{k}={v}" for k, v in PAGED_ARGS.items()))
+    _, pstats = serve_bench.run_paged(log, **PAGED_ARGS)
+    srec = make_record(
+        {**serve_series(sstats, SERVE_ARGS["kv_bits"]),
+         **paged_series(pstats)},
+        meta=common.run_meta({**SERVE_ARGS,
+                              "paged": PAGED_ARGS["page_size"]}))
     _, kout = kernel_bench.run(log, gate=False)
     krec = make_record(kernel_series(kout))
 

@@ -66,6 +66,13 @@ and inter-token latency and gating the ISSUE 7 acceptance numbers:
 hi-class p99 TTFT >= 2x better at tok/s within 10% of FIFO, spilled
 bytes packed (~kv_bits/16 of bf16), outputs token-identical.
 
+``--paged`` switches to the paged-KV-cache bench (run_paged): the slot
+pool vs the paged pool with copy-on-write prefix sharing on the
+shared-prefix Poisson trace (data/synthetic.shared_prefix_workload),
+gating token identity at equal slot count and a strict
+concurrent-residency win at equal HBM (serve.paged_slots_resident /
+serve.paged_bytes_ratio in the regression ledger).
+
     PYTHONPATH=src python benchmarks/serve_bench.py --kv-bits 4
     PYTHONPATH=src python benchmarks/serve_bench.py --matmul-mode dequant_einsum
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -336,6 +343,174 @@ def run_sla(log=print, *, arch="tiny-160k", num_slots=4, n_requests=24,
     return rows, stats
 
 
+def _run_tracked(srv, reqs):
+    """Serve the trace like _run_continuous but through an explicit step
+    loop that samples residency each step: returns (outs, wall_seconds,
+    {steps, peak_resident, peak_pages_held}).  peak_pages_held is 0 for
+    a slot pool."""
+    clock0 = srv.steps
+    t0 = time.perf_counter()
+    ids = [
+        srv.submit(r["prompt"], r["max_new"],
+                   arrival_time=clock0 + r["arrival_time"])
+        for r in reqs
+    ]
+    alloc = getattr(srv.pool, "allocator", None)
+    peak_res = peak_pages = 0
+    while not srv.scheduler.drained:
+        if not srv.scheduler.running:
+            nxt = srv.scheduler.next_arrival()
+            if nxt is not None and nxt > srv.steps:
+                srv.steps = int(np.ceil(nxt))
+        srv.step()
+        peak_res = max(peak_res, len(srv.scheduler.running))
+        if alloc is not None:
+            peak_pages = max(peak_pages, alloc.n_usable - alloc.n_free)
+    dt = time.perf_counter() - t0
+    res = {r.id: list(r.tokens) for r in srv.scheduler.finished}
+    outs = {i: res[rid] for i, rid in enumerate(ids)}
+    return outs, dt, {"steps": srv.steps - clock0,
+                      "peak_resident": peak_res,
+                      "peak_pages_held": peak_pages}
+
+
+def run_paged(log=print, *, arch="tiny-160k", num_slots=4, n_requests=12,
+              kv_bits=4, page_size=8, rate=4.0, seed=0, json_out=None,
+              cli_args=None):
+    """Paged-vs-slot-pool serving on the shared-prefix trace
+    (data/synthetic.shared_prefix_workload): every prompt is one of two
+    long shared system prefixes plus a short private suffix, arriving
+    Poisson — the workload copy-on-write prefix sharing exists for.
+    Three serves, same params, same jitted decode math:
+
+    * baseline  — the slot pool, ``num_slots`` rows of ``max_seq_len``;
+    * paged=    — the paged pool at the SAME slot count and the default
+      equal-token page budget: greedy outputs must be TOKEN-IDENTICAL
+      to the baseline (the tentpole's correctness bar — paging is pure
+      storage layout, docs/serving.md#paged-kv-cache);
+    * paged+    — the paged pool given 2x the decode rows but the
+      BASELINE pool's token budget in pages (equal HBM up to the one
+      reserved trash page): because each shared prefix is stored once
+      per PREFIX instead of once per request, the pool must hold
+      strictly more concurrent residents than ``num_slots`` — the gated
+      capacity win (serve.paged_slots_resident, benchmarks/ledger.py).
+
+    ``paged_bytes_ratio`` is the HBM the paged pool actually held at its
+    residency peak over what a slot pool would reserve for that many
+    residents (peak_pages * page_size / (peak_resident * max_seq_len)) —
+    deterministic, gated lower, < 1 is the COW + right-sizing dividend.
+    """
+    cfg = get_arch(arch)
+    if kv_bits < 16:
+        cfg = cfg.with_kv_quant(kv_bits)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = synthetic.shared_prefix_workload(cfg.vocab_size, n_requests,
+                                            rate=rate, seed=seed)
+    need = max(len(r["prompt"]) + r["max_new"] for r in reqs)
+    max_seq_len = -(-need // page_size) * page_size
+    total_tokens = sum(r["max_new"] for r in reqs)
+    base_pages = num_slots * (max_seq_len // page_size)
+    n_prefixes = len({r["prefix_id"] for r in reqs})
+    log(f"  {n_requests} requests over {n_prefixes} shared prefixes, "
+        f"poisson rate {rate}/step, kv{kv_bits}, page_size {page_size}, "
+        f"cache_len {max_seq_len}")
+
+    def _serve(paged: bool, slots: int, n_pages=None):
+        tel = Telemetry()
+        srv = Server(params, cfg, num_slots=slots, max_seq_len=max_seq_len,
+                     telemetry=tel, paged=paged, page_size=page_size,
+                     n_pages=n_pages)
+
+        def _pass():
+            tel.reset()
+            srv.pool.record_footprint()
+            return _run_tracked(srv, reqs)
+
+        outs, dt, st = common.compile_warm(_pass)
+        return outs, dt, st, tel, srv
+
+    out_b, dt_b, st_b, tel_b, srv_b = _serve(False, num_slots)
+    kvb_b = srv_b.pool.kv_bytes()
+    tps_b = total_tokens / dt_b
+    log(f"  slot pool:   {num_slots} slots, {kvb_b['total']/1e6:7.3f} MB, "
+        f"{st_b['steps']} steps, peak resident {st_b['peak_resident']}, "
+        f"{tps_b:8.1f} tok/s")
+
+    # same slot count, equal token budget: the identity leg
+    out_p, dt_p, st_p, tel_p, srv_p = _serve(True, num_slots)
+    mism = [i for i in range(n_requests) if out_p[i] != out_b[i]]
+    if mism:
+        raise AssertionError(
+            f"paged greedy outputs diverge from the slot pool for "
+            f"requests {mism[:5]} — paging leaked into the math"
+        )
+    log(f"  paged=:      token-identical to the slot pool "
+        f"({st_p['steps']} steps, cow_hits "
+        f"{srv_p.pool.allocator.cow_hits})")
+
+    # 2x the rows, the baseline's token budget in pages: the capacity leg
+    out_e, dt_e, st_e, tel_e, srv_e = _serve(True, 2 * num_slots,
+                                             n_pages=base_pages + 1)
+    mism = [i for i in range(n_requests) if out_e[i] != out_b[i]]
+    if mism:
+        raise AssertionError(
+            f"equal-HBM paged outputs diverge for requests {mism[:5]}"
+        )
+    tps_e = total_tokens / dt_e
+    kvb_e = srv_e.pool.kv_bytes()
+    peak = st_e["peak_resident"]
+    bytes_ratio = (st_e["peak_pages_held"] * page_size
+                   / max(peak * max_seq_len, 1))
+    cow = srv_e.pool.allocator.cow_hits
+    log(f"  paged+:      {2 * num_slots} slots on the kv{kv_bits} "
+        f"slot-pool page budget ({base_pages} pages, "
+        f"{kvb_e['total']/1e6:7.3f} MB incl. trash page): peak resident "
+        f"{peak} (slot pool {st_b['peak_resident']}), "
+        f"{st_e['steps']} steps, {tps_e:8.1f} tok/s,\n"
+        f"               peak {st_e['peak_pages_held']} pages held = "
+        f"{bytes_ratio:.3f} of the slot bytes for that residency, "
+        f"cow_hits {cow}")
+    assert peak > st_b["peak_resident"], (
+        f"equal-HBM paged residency {peak} must beat the slot pool's "
+        f"{st_b['peak_resident']} — prefix sharing bought nothing"
+    )
+    assert cow > 0, "shared-prefix trace produced no COW forks"
+    assert bytes_ratio < 1.0, (
+        f"paged peak bytes ratio {bytes_ratio:.3f} >= 1: paging held "
+        f"more HBM than slot rows for the same residency"
+    )
+
+    stats = {
+        "kv_bits": kv_bits, "page_size": page_size,
+        "paged_slots_resident": peak,
+        "paged_bytes_ratio": bytes_ratio,
+        "slots_resident_baseline": st_b["peak_resident"],
+        "paged_steps": st_e["steps"], "baseline_steps": st_b["steps"],
+        "paged_cow_hits": cow,
+        "tok_s_baseline": tps_b, "tok_s_paged": tps_e,
+        "kv_mb_baseline": kvb_b["total"] / 1e6,
+        "kv_mb_paged": kvb_e["total"] / 1e6,
+    }
+    rows = [
+        ("serve/paged_resident", float(peak),
+         f"baseline={st_b['peak_resident']};pages={base_pages};"
+         f"cow_hits={cow}"),
+        ("serve/paged_bytes_ratio", bytes_ratio,
+         f"peak_pages={st_e['peak_pages_held']};page_size={page_size}"),
+        ("serve/paged_tok_s", dt_e / total_tokens * 1e6,
+         f"tok_s={tps_e:.1f};baseline_tok_s={tps_b:.1f}"),
+    ]
+    if json_out is not None:
+        path = Path(json_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"arch": arch, "num_slots": num_slots,
+             "n_requests": n_requests,
+             "meta": common.run_meta(cli_args), **stats}, indent=2))
+        log(f"  stats -> {path}")
+    return rows, stats
+
+
 def run(log=print, *, arch="tiny-160k", num_slots=8, n_requests=48,
         rate=4.0, max_new_range=(8, 48), quantized=True, seed=0,
         kv_bits=None, matmul_mode="auto", mesh_spec=None, json_out=None,
@@ -548,6 +723,13 @@ if __name__ == "__main__":
                          "classes + chunked prefill + preemption with "
                          "quantized spill) on the two-class bursty trace "
                          "instead of the static-vs-continuous sweep")
+    ap.add_argument("--paged", action="store_true",
+                    help="bench the paged KV cache (copy-on-write prefix "
+                         "sharing) vs the slot pool on the shared-prefix "
+                         "Poisson trace: token identity at equal slots, "
+                         "residency win at equal HBM")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per page for --paged (default 8)")
     ap.add_argument("--matmul-mode", default="auto",
                     choices=["auto", "fused", "dequant_einsum"],
                     help="QuantizedTensor matmul dispatch for both the "
@@ -564,7 +746,22 @@ if __name__ == "__main__":
                     help="dump the stats dict as JSON (CI uploads it "
                          "next to the other bench artifacts)")
     args = ap.parse_args()
-    if args.sla:
+    if args.sla and args.paged:
+        raise SystemExit("--sla and --paged are separate benches; "
+                         "pick one")
+    if args.paged:
+        if args.mesh is not None:
+            raise SystemExit("--paged is single-device (paged serving "
+                             "forbids a sharder); drop --mesh")
+        run_paged(arch=args.arch,
+                  num_slots=args.num_slots if args.num_slots is not None
+                  else 4,
+                  n_requests=args.num_requests
+                  if args.num_requests is not None else 12,
+                  kv_bits=args.kv_bits if args.kv_bits is not None else 4,
+                  page_size=args.page_size,
+                  json_out=args.json_out, cli_args=vars(args))
+    elif args.sla:
         if args.mesh is not None:
             raise SystemExit("--sla is single-device (chunked prefill "
                              "forbids a sharder); drop --mesh")

@@ -147,6 +147,59 @@ def two_class_workload(vocab: int, n_requests: int, *,
     return reqs
 
 
+def shared_prefix_workload(vocab: int, n_requests: int, *,
+                           n_prefixes: int = 2,
+                           prefix_len: int = 24,
+                           suffix_len: int = 6,
+                           max_new_range=(8, 16),
+                           rate: float = 4.0,
+                           seed: int = 0) -> list:
+    """A multi-tenant chat-style trace: every request's prompt is one of
+    `n_prefixes` long SHARED prefixes (the "system prompt") followed by a
+    short private suffix, with Poisson arrivals at `rate` requests per
+    engine step.  This is the workload the paged KV cache's copy-on-write
+    prefix sharing exists for: a slot pool stores the prefix once per
+    REQUEST, the paged pool once per PREFIX, so at equal HBM the paged
+    server holds strictly more concurrent residents
+    (benchmarks/serve_bench.py --paged, docs/serving.md#paged-kv-cache).
+
+    All prompts share one total length (prefix_len + suffix_len) so
+    every admission compiles into the same prefill bucket — a
+    requirement for COW hits, whose keys embed the compile bucket
+    (serving/pages.py).
+
+    Returns dicts {prompt, max_new, arrival_time, priority, prefix_id}
+    sorted by arrival; fully deterministic in `seed`.
+    """
+    rng = np.random.default_rng(seed)
+    proc = ZipfMarkov(vocab, seed=seed)
+    L = prefix_len + suffix_len
+    prefixes = [
+        np.asarray(proc.sample(
+            jax.random.fold_in(jax.random.PRNGKey(seed + 41), p), 1, L))[0]
+        for p in range(n_prefixes)
+    ]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    reqs = []
+    for i in range(n_requests):
+        p = int(rng.integers(0, n_prefixes))
+        # private suffix: overwrite the tail of the shared sample so the
+        # first prefix_len tokens stay bitwise-shared across the group
+        prompt = prefixes[p].copy()
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 43), i)
+        tail = np.asarray(proc.sample(key, 1, L - prefix_len))[0]
+        prompt[prefix_len:] = tail
+        reqs.append({
+            "prompt": prompt,
+            "max_new": int(rng.integers(max_new_range[0],
+                                        max_new_range[1] + 1)),
+            "arrival_time": float(arrivals[i]),
+            "priority": 0,
+            "prefix_id": p,
+        })
+    return reqs
+
+
 def batches(vocab: int, batch: int, seq_len: int, *, seed: int = 0,
             start_step: int = 0):
     """Infinite deterministic batch iterator; resumable via start_step

@@ -210,6 +210,39 @@ def dequant_rows(packed, scales, spec: KVQuantSpec, feat: int, *,
     return flat.reshape(lead + (feat,))
 
 
+def gather_pages(leaf: jnp.ndarray, page_map: jnp.ndarray) -> jnp.ndarray:
+    """Gather a paged cache leaf through a page-index vector.
+
+    ``leaf`` is page-major storage [n_pages, ps, ...] (any trailing dims:
+    packed code words, scales, dense heads, or a pos array with none);
+    ``page_map`` [B, P] holds each sequence's page ids in table order.
+    Returns the CONTIGUOUS per-sequence view [B, P * ps, ...] in which
+    absolute position p of sequence b lives at index p — i.e. exactly the
+    slot-pool row layout, so every downstream consumer (dequant, the
+    masked flash-decoding partials) runs unchanged on the gathered view.
+
+    The layout invariant that makes this safe for packed caches: blocks
+    and code words run along the FEATURE dim only (module docstring), so
+    a page boundary on the token axis never splits quantization state —
+    gather-then-dequant equals dequant-then-gather elementwise."""
+    B, P = page_map.shape
+    ps = leaf.shape[1]
+    g = jnp.take(leaf, page_map.reshape(-1), axis=0)      # [B*P, ps, ...]
+    return g.reshape((B, P * ps) + leaf.shape[2:])
+
+
+def dequant_pages(packed, scales, page_map, spec: KVQuantSpec, feat: int, *,
+                  interpret: bool = False, out_dtype=jnp.bfloat16):
+    """Dequantize a paged packed cache through a page-index vector:
+    packed [n_pages, ps, W] + scales [n_pages, ps, NB] gathered via
+    ``page_map`` [B, P] -> dense [B, P*ps, feat].  Bitwise equal to
+    gathering a pre-dequantized cache because dequant is row-local."""
+    return dequant_rows(
+        gather_pages(packed, page_map), gather_pages(scales, page_map),
+        spec, feat, interpret=interpret, out_dtype=out_dtype,
+    )
+
+
 def kv_stored_bytes_per_token(spec: Optional[KVQuantSpec], feat: int,
                               cache_dtype_bytes: int = 2) -> float:
     """HBM bytes one cached K *or* V token row occupies under the spec

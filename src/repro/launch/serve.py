@@ -21,6 +21,13 @@ Two modes:
   victims by spilling their packed KV rows to host — all three are
   token-identical to the plain FIFO serve.
 
+  ``--paged`` swaps the slot pool for the paged KV cache with
+  copy-on-write prefix sharing (docs/serving.md#paged-kv-cache):
+  ``--page-size T`` sets tokens per page (default 16) and ``--pages N``
+  caps the global page pool (default: the slot pool's token capacity).
+  Token-identical to the unpaged serve; single-host, full-attention
+  archs only, mutually exclusive with --prefill-chunk and --mesh.
+
 * ``--mode static`` — the legacy same-length batch path (Engine).
 
       PYTHONPATH=src python -m repro.launch.serve --arch tiny-2.6m \
@@ -87,7 +94,7 @@ from repro.train import step as step_mod
 
 _STATIC_ONLY = ("batch", "prompt_len")
 _CONTINUOUS_ONLY = ("num_slots", "num_requests", "rate", "prefill_chunk",
-                    "priorities", "max_preemptions")
+                    "priorities", "max_preemptions", "page_size", "pages")
 
 
 def load_params(cfg, ckpt_dir):
@@ -168,6 +175,8 @@ def validate_flags(args) -> None:
         bad = [f for f in _CONTINUOUS_ONLY if getattr(args, f) is not None]
         if args.stream:
             bad.append("stream")
+        if args.paged:
+            bad.append("paged")
         if args.kv_probe_every is not None:
             bad.append("kv_probe_every")
         if bad:
@@ -195,6 +204,28 @@ def validate_flags(args) -> None:
     if args.prefill_chunk is not None and args.prefill_chunk < 1:
         raise SystemExit("--prefill-chunk wants a positive chunk length, "
                          f"got {args.prefill_chunk}")
+    if not args.paged and (args.page_size is not None
+                           or args.pages is not None):
+        raise SystemExit(
+            "--page-size/--pages configure the paged KV cache; they need "
+            "--paged (the slot pool has no pages)"
+        )
+    if args.paged:
+        if args.prefill_chunk is not None:
+            raise SystemExit(
+                "--paged and --prefill-chunk are mutually exclusive (the "
+                "chunk workspace commits whole slot rows; pick one)"
+            )
+        if args.mesh is not None:
+            raise SystemExit(
+                "--paged serving is single-host for now; drop --mesh"
+            )
+        if args.page_size is not None and args.page_size < 1:
+            raise SystemExit("--page-size wants a positive token count, "
+                             f"got {args.page_size}")
+        if args.pages is not None and args.pages < 2:
+            raise SystemExit("--pages wants >= 2 (page 0 is the reserved "
+                             f"trash page), got {args.pages}")
     if args.priorities is not None and args.priorities < 1:
         raise SystemExit("--priorities wants at least one class, "
                          f"got {args.priorities}")
@@ -284,6 +315,20 @@ def build_argparser() -> argparse.ArgumentParser:
                          "restoring them bit-exactly later (continuous "
                          "mode; needs --priorities >= 2; default: 0 = "
                          "never preempt)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache: a global "
+                         "page pool with refcounted copy-on-write prefix "
+                         "sharing instead of per-slot rows (continuous "
+                         "mode, full-attention archs, single host; "
+                         "token-identical to the slot pool — "
+                         "docs/serving.md#paged-kv-cache)")
+    ap.add_argument("--page-size", type=int, default=None, metavar="T",
+                    help="tokens per KV page (needs --paged; default 16, "
+                         "power of two dividing the cache length)")
+    ap.add_argument("--pages", type=int, default=None, metavar="N",
+                    help="global page-pool size incl. the reserved trash "
+                         "page (needs --paged; default: the slot pool's "
+                         "token capacity)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens of the first request as they land")
     # telemetry sinks (docs/observability.md); either flag swaps the
@@ -425,10 +470,20 @@ def main(argv=None):
         rate=rate, priorities=priorities,
     )
     max_seq_len = max(len(r["prompt"]) for r in reqs) + args.max_new
+    page_size = args.page_size if args.page_size is not None else 16
+    if args.paged:
+        # pages must tile the cache budget exactly
+        max_seq_len = -(-max_seq_len // page_size) * page_size
     server = Server(params, cfg, num_slots=num_slots,
                     max_seq_len=max_seq_len, sharder=sharder,
                     telemetry=telemetry, prefill_chunk=args.prefill_chunk,
-                    max_preemptions=max_preemptions)
+                    max_preemptions=max_preemptions,
+                    paged=args.paged, page_size=page_size,
+                    n_pages=args.pages)
+    if args.paged:
+        a = server.pool.allocator
+        print(f"paged kv cache: {a.n_usable} pages x {page_size} tokens "
+              f"(+1 trash), {server.pool.kv_bytes()['total']/1e6:.3f} MB")
     if priorities > 1 or args.prefill_chunk is not None:
         print(f"scheduler: {priorities} priority classes, "
               f"prefill chunk {args.prefill_chunk or 'off'}, "
@@ -459,6 +514,11 @@ def main(argv=None):
           f"{server.scheduler.n_preemptions} preemptions)")
     print(f"latency (engine steps): mean {np.mean(lat):.1f} "
           f"p95 {np.percentile(lat, 95):.1f}")
+    if args.paged:
+        a = server.pool.allocator
+        print(f"paged: {a.cow_hits} cow forks, {a.alloc_total} pages "
+              f"allocated / {a.freed_total} freed "
+              f"({a.n_free}/{a.n_usable} free at drain)")
     print("sample:", results[first_id])
     _finish_telemetry(telemetry, args)
 

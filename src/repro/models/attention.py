@@ -545,3 +545,83 @@ def decode_attention(q, cache, pos, *, cap=0.0, window=0, kvq=None):
     )
     o = combine_partials(m, l, pv, None)
     return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# paged decode (serving/pages.py builds the closure that threads page_map)
+# --------------------------------------------------------------------------
+
+def write_cache_paged(cache: dict, k_new, v_new, pos, page_map, *,
+                      page_size: int, kvq=None) -> dict:
+    """Write one token's K/V into PAGE-MAJOR storage.
+
+    ``cache`` leaves are [n_pages, ps, ...] with a per-page pos array
+    [n_pages, ps]; ``pos`` is the per-row vector [B] (-1 = idle row);
+    ``page_map`` [B, P] maps each row's logical page index to its physical
+    page id (0 for unallocated table entries).  Row b's token at absolute
+    position p lands in page ``page_map[b, p // ps]`` at offset ``p % ps``
+    — the same (row, position) cell the slot pool writes, relocated
+    page-wise.  Idle rows (pos < 0) and any out-of-table position redirect
+    to the reserved trash page 0, where only pos = -1 is ever stored, so
+    they stay inert exactly like the slot path's clamped idle writes.
+    Append-quantize semantics match :func:`write_cache_decode` verbatim.
+    Window/ring caches are not supported (the server gates paged mode to
+    full-cache attention archs)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    assert pos.ndim == 1, "paged writes need a per-row pos vector"
+    B = pos.shape[0]
+    S_total = page_map.shape[1] * page_size
+    safe = jnp.clip(pos, 0, S_total - 1)
+    live = pos >= 0
+    page = jnp.where(live, page_map[jnp.arange(B), safe // page_size], 0)
+    off = jnp.where(live, safe % page_size, 0)
+    if kvq is not None and _is_quantized_cache(cache):
+        feat = k_new.shape[-2] * k_new.shape[-1]
+        kp, ks = kv_dequant.encode_rows(k_new.reshape(B, feat), kvq)
+        vp, vs = kv_dequant.encode_rows(v_new.reshape(B, feat), kvq)
+        out = {
+            key: cache[key].at[page, off].set(val)
+            for key, val in (("k_packed", kp), ("k_scales", ks),
+                             ("v_packed", vp), ("v_scales", vs))
+        }
+        out["pos"] = cache["pos"].at[page, off].set(jnp.where(live, pos, -1))
+        return out
+    out = {
+        "k": cache["k"].at[page, off].set(k_new),
+        "v": cache["v"].at[page, off].set(v_new),
+        "pos": cache["pos"].at[page, off].set(jnp.where(live, pos, -1)),
+    }
+    return out
+
+
+def paged_decode_attention(q, cache, pos, page_map, *, cap=0.0, kvq=None):
+    """Single-token attention against a PAGED cache: gather every leaf
+    through the page-index vector (kernels/kv_dequant.gather_pages) into
+    the contiguous [B, P*ps, ...] per-sequence view, then run the exact
+    slot-pool read path on it.  Because the gathered view places absolute
+    position p at index p (page_map is in table order) and invalid entries
+    carry pos = -1 (trash page / unwritten offsets), the masked partials
+    are bitwise identical to :func:`decode_attention` over a slot row
+    holding the same tokens — the correctness bar for --paged serving."""
+    B, H, Dh = q.shape
+    if kvq is not None and _is_quantized_cache(cache):
+        feat = cache["k_packed"].shape[-1] * (32 // kvq.bits)
+        K = feat // Dh
+        k_cache = kv_dequant.dequant_pages(
+            cache["k_packed"], cache["k_scales"], page_map, kvq, feat
+        )
+        v_cache = kv_dequant.dequant_pages(
+            cache["v_packed"], cache["v_scales"], page_map, kvq, feat
+        )
+        S_c = k_cache.shape[1]
+        k_cache = k_cache.reshape(B, S_c, K, Dh)
+        v_cache = v_cache.reshape(B, S_c, K, Dh)
+    else:
+        k_cache = kv_dequant.gather_pages(cache["k"], page_map)
+        v_cache = kv_dequant.gather_pages(cache["v"], page_map)
+    pos_arr = kv_dequant.gather_pages(cache["pos"], page_map)  # [B, P*ps]
+    m, l, pv = decode_attention_partial(
+        q, k_cache, v_cache, pos_arr, pos, cap=cap, window=0
+    )
+    o = combine_partials(m, l, pv, None)
+    return o.reshape(B, H, Dh).astype(q.dtype)

@@ -84,9 +84,15 @@ def init_layer_cache(mixer: str, cfg, batch: int, cache_len: int, dtype=jnp.bflo
 
 def apply_layer_seq(
     p, x, *, mixer, ffn, cfg, constrain, positions, q_pad=None, write_cache=False,
-    cache_len=None,
+    cache_len=None, pad_mask=None,
 ):
-    """Sequence mode (train / prefill). Returns (x, cache_out, aux)."""
+    """Sequence mode (train / prefill). Returns (x, cache_out, aux).
+
+    ``pad_mask`` [B,S] (True = real token) reaches only the MoE router's
+    capacity accounting (models/moe.py): attention is causal so pad rows
+    never feed real rows, and padded cache positions are invalidated by
+    the serving scatter — MoE capacity competition is the one cross-token
+    path where padding corrupts real tokens."""
     aux = {}
     cache_out = None
     h = norm(p["mixer_norm"], x, cfg.norm_type)
@@ -133,7 +139,8 @@ def apply_layer_seq(
     if ffn is not None:
         h = norm(p["ffn_norm"], x, cfg.norm_type)
         if ffn == "moe":
-            o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg, constrain)
+            o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg, constrain,
+                                     pad_mask=pad_mask)
         else:
             o = mlp(p["ffn"], h, cfg, constrain)
         if cfg.post_block_norm:
@@ -223,7 +230,15 @@ def apply_layer_decode(p, x, cache, pos, *, mixer, ffn, cfg, constrain, decode_a
     if ffn is not None:
         h = norm(p["ffn_norm"], x, cfg.norm_type)
         if ffn == "moe":
-            o, _ = moe_mod.moe_ffn(p["ffn"], h[:, None, :], cfg, constrain)
+            # continuous batching: idle rows (vector pos < 0) carry junk
+            # hidden states — mask them out of capacity accounting so
+            # they cannot crowd real rows' expert slots.  Scalar pos
+            # (legacy batch decode, every row live) keeps the unmasked
+            # path byte-for-byte.
+            pos_d = jnp.asarray(pos)
+            pm = (pos_d >= 0)[:, None] if pos_d.ndim else None
+            o, _ = moe_mod.moe_ffn(p["ffn"], h[:, None, :], cfg, constrain,
+                                   pad_mask=pm)
             o = o[:, 0]
         else:
             o = mlp(p["ffn"], h, cfg, constrain)
@@ -272,7 +287,8 @@ def stack_schedule(cfg) -> list:
 
 
 def apply_stack_seq(stack, x, cfg, *, constrain, positions, q_pad=None,
-                    write_cache=False, cache_len=None, remat=False):
+                    write_cache=False, cache_len=None, remat=False,
+                    pad_mask=None):
     """Run all layers in sequence mode. Returns (x, caches, aux_sum)."""
     sched = stack_schedule(cfg)
 
@@ -284,7 +300,7 @@ def apply_stack_seq(stack, x, cfg, *, constrain, positions, q_pad=None,
                 xs[j], x,
                 mixer=mixer, ffn=ffn_kind, cfg=cfg, constrain=constrain,
                 positions=positions, q_pad=q_pad, write_cache=write_cache,
-                cache_len=cache_len,
+                cache_len=cache_len, pad_mask=pad_mask,
             )
             caches_out.append(cache_out)
             aux_sum = aux_sum + aux.get("moe_aux", 0.0)

@@ -93,7 +93,11 @@ def embed_inputs(params, batch_inputs, cfg):
 
 
 def backbone_seq(params, inputs, cfg, *, constrain=NO_CONSTRAIN, q_pad=None,
-                 write_cache=False, cache_len=None, remat=False):
+                 write_cache=False, cache_len=None, remat=False,
+                 pad_mask=None):
+    """``pad_mask`` [B,S] (True = real token) flows to the MoE router's
+    capacity accounting only (models/moe.py) — the serving path passes it
+    for bucket-padded prefills so MoE archs bucket safely."""
     x = embed_inputs(params, inputs, cfg)
     x = constrain(x, "residual")
     S = x.shape[1]
@@ -102,6 +106,7 @@ def backbone_seq(params, inputs, cfg, *, constrain=NO_CONSTRAIN, q_pad=None,
         params["stack"], x, cfg,
         constrain=constrain, positions=positions, q_pad=q_pad,
         write_cache=write_cache, cache_len=cache_len, remat=remat,
+        pad_mask=pad_mask,
     )
     x = norm(params["final_norm"], x, cfg.norm_type)
     return x, caches, aux

@@ -54,14 +54,36 @@ def _n_groups(T: int) -> int:
     return 16 if T % 16 == 0 and T >= 256 else 1
 
 
-def moe_ffn(params, x, cfg, constrain=lambda t, kind: t):
-    """x [B,S,D] -> [B,S,D] (+aux loss dict). `constrain` applies sharding."""
+def moe_ffn(params, x, cfg, constrain=lambda t, kind: t, pad_mask=None):
+    """x [B,S,D] -> [B,S,D] (+aux loss dict). `constrain` applies sharding.
+
+    ``pad_mask`` [B,S] bool (True = real token) excludes padding from the
+    ROUTER'S CAPACITY ACCOUNTING — the fix that makes bucketed prefill
+    safe for MoE archs.  Routing itself is per-token (a pad row cannot
+    corrupt another row's softmax), but capacity is global: without the
+    mask, pad rows consume (expert, slot) capacity ahead of real tokens
+    in the cumsum AND the static capacity C = f(padded length) inflates,
+    so a bucket-padded prefill could drop different tokens than the
+    exact-length program.  With the mask:
+
+      * pad rows leave the dispatch count (their one-hot is zeroed, so
+        real tokens' position-in-expert matches the exact-length run);
+      * capacity becomes the TRACED ``capacity(n_real)`` (bitwise the
+        exact-length static formula) clamped to the padded-length static
+        buffer bound;
+      * pad rows' combine weights and aux-loss contributions are zeroed.
+
+    Dispatch groups are forced to G=1 under a mask — group boundaries of
+    a padded length differ from the exact length's, so grouped masked
+    dispatch could never match it.  With pad_mask=None the legacy path
+    is byte-for-byte untouched."""
     B, S, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
     T = B * S
-    G = _n_groups(T)
+    G = 1 if pad_mask is not None else _n_groups(T)
     Tg = T // G
     xt = constrain(x.reshape(G, Tg, D), "moe_groups")
+    mask = None if pad_mask is None else pad_mask.reshape(G, Tg)
 
     logits = linear(xt, params["router"]).astype(jnp.float32)  # [G,Tg,E]
     probs = jax.nn.softmax(logits, axis=-1)
@@ -71,10 +93,27 @@ def moe_ffn(params, x, cfg, constrain=lambda t, kind: t):
     # per-group position of each (token, choice) within its expert
     C = capacity(Tg, cfg)
     onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # [G,Tg,k,E]
+    if mask is not None:
+        # pads never claim an (expert, slot): real tokens' dispatch
+        # positions are those of the exact-length run
+        onehot = onehot * mask[..., None, None].astype(jnp.int32)
     flat = onehot.reshape(G, Tg * k, E)
     pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # exclusive prefix count
     pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Tg, k)
-    keep = pos < C  # dropped beyond capacity (standard switch behavior)
+    if mask is None:
+        c_lim = C
+    else:
+        # traced twin of capacity(n_real): same floor/round-to-8 math, so
+        # a bucket-padded prefill keeps exactly what exact-length keeps
+        n_real = jnp.sum(mask, axis=1).astype(jnp.float32)  # [G]
+        c_dyn = jnp.floor(
+            cfg.capacity_factor * cfg.top_k * n_real / E
+        ).astype(jnp.int32)
+        c_dyn = jnp.maximum(8, -(-c_dyn // 8) * 8)
+        c_lim = jnp.minimum(c_dyn, C)[:, None, None]  # static buffer bound
+    keep = pos < c_lim  # dropped beyond capacity (standard switch behavior)
+    if mask is not None:
+        keep = keep & mask[..., None]
 
     e_flat = expert_idx.reshape(G, Tg * k)
     p_flat = jnp.where(keep, pos, C).reshape(G, Tg * k)  # overflow -> row C
@@ -110,11 +149,15 @@ def moe_ffn(params, x, cfg, constrain=lambda t, kind: t):
     y = jnp.sum(gathered * w[..., None], axis=2)
 
     # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
-    frac_tokens = jnp.mean(
-        jax.nn.one_hot(expert_idx[..., 0].reshape(-1), E, dtype=jnp.float32),
-        axis=0,
-    )
-    frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    top1 = jax.nn.one_hot(expert_idx[..., 0].reshape(-1), E, dtype=jnp.float32)
+    if mask is None:
+        frac_tokens = jnp.mean(top1, axis=0)
+        frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    else:
+        mf = mask.reshape(-1, 1).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mf), 1.0)
+        frac_tokens = jnp.sum(top1 * mf, axis=0) / denom
+        frac_probs = jnp.sum(probs.reshape(-1, E) * mf, axis=0) / denom
     aux = E * jnp.sum(frac_tokens * frac_probs)
     return y.reshape(B, S, D), {"moe_aux": aux}
 

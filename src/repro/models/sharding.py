@@ -305,7 +305,12 @@ class Sharder:
         seq_axes = tuple(a for a in self.mesh.axis_names if a not in usable)
         return batch_axes, seq_axes
 
-    def cache_spec_tree(self, caches, batch: int):
+    def cache_spec_tree(self, caches, batch: int, *, paged: bool = False):
+        """Placement specs for a decode-cache tree.  ``paged=True`` places
+        a PAGE-MAJOR pool (serving/pages.py: batch axis = physical pages,
+        token axis = one page): pages spread over the batch axes like
+        slots do, but the tiny intra-page token axis stays unsharded —
+        sequence parallelism is over pages, not positions."""
         if self.mesh is None:
             return jax.tree.map(lambda _: None, caches)
         b_ax, s_ax = self.decode_plan(batch)
@@ -317,11 +322,16 @@ class Sharder:
                 # dense [n_p, B, S, K, Dh] or packed/scales [n_p, B, S, X]:
                 # the slot axis is dim 2 either way (packed layouts keep
                 # all quantization state inside the token row)
+                if paged:
+                    return self._ns(None, b_ax, None,
+                                    *((None,) * (leaf.ndim - 3)))
                 s = _maybe(s_ax, leaf.shape[2], self._axis_size(s_ax))
                 lead = (None,) * (leaf.ndim - 3)
                 return self._ns(None, b_ax, s, *lead)
             if "pos" in keys:
                 if leaf.ndim == 3:  # per-slot [n_p, B, S_c]
+                    if paged:
+                        return self._ns(None, b_ax, None)
                     s = _maybe(s_ax, leaf.shape[2], self._axis_size(s_ax))
                     return self._ns(None, b_ax, s)
                 s = _maybe(s_ax, leaf.shape[1], self._axis_size(s_ax))

@@ -6,6 +6,7 @@ from repro.serving.engine import (
     sample_token,
 )
 from repro.serving.kvcache import SlotKVCache
+from repro.serving.pages import PageAllocator, PagedKVPool, prefix_page_keys
 from repro.serving.profiler import StepProfiler
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.server import Server, bucket_len
@@ -20,7 +21,8 @@ from repro.serving.trace import (
 
 __all__ = [
     "Engine", "KV_LOGIT_TOL", "kv_oracle_logit_gap", "perplexity",
-    "sample_token", "SlotKVCache", "Scheduler", "Request", "Server",
+    "sample_token", "SlotKVCache", "PagedKVPool", "PageAllocator",
+    "prefix_page_keys", "Scheduler", "Request", "Server",
     "bucket_len", "Telemetry", "MetricsRegistry", "NOOP", "StepProfiler",
     "Tracer", "to_chrome_trace", "trace_stats", "validate_events",
     "validate_jsonl",

@@ -89,7 +89,8 @@ class Request:
     state: str = QUEUED
     slot: int | None = None
     tokens: list = field(default_factory=list)
-    admitted_at: float | None = None
+    admitted_at: float | None = None      # most recent bind (resume included)
+    first_admitted_at: float | None = None  # first bind ever — never reset
     finished_at: float | None = None
     preemptions: int = 0             # times evicted from a slot so far
     # wall-clock telemetry marks (host perf_counter; None until recorded)
@@ -194,10 +195,12 @@ class Scheduler:
         q.popleft()
         assert req.state in (QUEUED, PREEMPTED)
         resumed = req.state == PREEMPTED
-        first = req.admitted_at is None
+        first = req.first_admitted_at is None
         req.state = RUNNING
         req.slot = slot
         req.admitted_at = now
+        if first:
+            req.first_admitted_at = now
         self.running[slot] = req
         if self.telemetry.enabled:
             if first:
@@ -213,9 +216,15 @@ class Scheduler:
         """Slot whose request should be evicted so `req` can run, or None.
         Eligible victims run at a STRICTLY worse (higher) original class
         than `req` and have been evicted fewer than max_preemptions
-        times; the worst class wins, latest-admitted among ties (it has
-        the least sunk work).  `exclude` masks slots the server cannot
-        evict (e.g. mid-chunk prefills with no cache rows to spill)."""
+        times; the worst class wins, latest-FIRST-admitted among ties
+        (it has the least sunk work).  The tiebreak reads
+        ``first_admitted_at``, not ``admitted_at``: a resume refreshes
+        the latter, so keying on it would re-pick the request that just
+        restored as "least sunk" every time — repeated preemption of the
+        same victim until its max_preemptions immunity, i.e. starvation
+        by eviction.  First-admission time is preemption-invariant.
+        `exclude` masks slots the server cannot evict (e.g. mid-chunk
+        prefills with no cache rows to spill)."""
         if self.max_preemptions <= 0:
             return None
         best = None
@@ -226,7 +235,7 @@ class Scheduler:
                 continue
             if r.preemptions >= self.max_preemptions:
                 continue
-            key = (r.priority, r.admitted_at, r.id)
+            key = (r.priority, r.first_admitted_at, r.id)
             if best is None or key > best[0]:
                 best = (key, slot)
         return best[1] if best else None

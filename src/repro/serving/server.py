@@ -61,6 +61,21 @@ TPU, jnp oracle on CPU) — kernels/kv_dequant.py, docs/serving.md.  The
 pool pytree still never changes shape, so compile-once-per-bucket and
 the scatter-based admission are untouched; ``pool.kv_bytes()`` shows
 the ~16/k HBM saving that buys more slots or longer contexts.
+
+``paged=True`` swaps the slot pool for a PAGE-TABLE pool
+(serving/pages.py): KV storage becomes a global pool of fixed-size page
+blocks with refcounted copy-on-write prefix sharing, so HBM is spent on
+tokens actually stored — not per-slot worst cases — and requests sharing
+a prompt prefix store it once.  The decode step gathers each row's pages
+through its table (a traced argument — table churn never recompiles) and
+runs the identical masked flash-decoding math on the gathered view, so
+paged greedy outputs are token-identical to the slot pool at every
+kv_bits.  Preemption spills only a request's PRIVATE page suffix and
+retains the shared prefix by refcount.  Paged mode requires a
+full-attention arch and is single-host; it composes with kv_bits because
+quantized blocks run along the feature dim only, so packed pages are
+self-contained (the paper's storage layout is page-shaped by
+construction).
 """
 
 from __future__ import annotations
@@ -77,6 +92,11 @@ from repro.models import blocks, lm
 from repro.models.sharding import check_decode_capability
 from repro.serving.engine import sample_token
 from repro.serving.kvcache import SlotKVCache, scatter_row, workspace_to_row
+from repro.serving.pages import (
+    PagedKVPool,
+    paged_decode_attn_fn,
+    scatter_pages,
+)
 from repro.serving.profiler import null_annotation
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.telemetry import (
@@ -123,11 +143,14 @@ class _ChunkState:
 
 def _bucketing_safe(cfg) -> bool:
     """Padded prefill is provably inert only when every mixer is causal
-    full attention AND there is no MoE: SSM tail states and ring buffers
-    would absorb the padding, and MoE capacity dispatch is cross-token —
-    junk tokens compete for expert capacity and shift real tokens'
-    keep/drop decisions, breaking the Engine==Server identity."""
-    return cfg.n_experts == 0 and all(
+    full attention: SSM tail states and sliding-window ring buffers
+    would absorb the padding.  MoE archs ARE bucketing-safe: the one
+    cross-token padding hazard — junk tokens competing for expert
+    capacity — is closed by the router pad mask the server threads into
+    its prefill (models/moe.py pad_mask zeroes pads out of the dispatch
+    count and uses the exact-length traced capacity), so real tokens
+    keep/drop exactly as at exact length."""
+    return all(
         m.startswith("attn") and blocks._mixer_window(m, cfg) == 0
         for m, _ in cfg.layer_schedule()
     )
@@ -143,17 +166,43 @@ class Server:
                  dtype=jnp.bfloat16, plan=None,
                  matmul_mode: str | None = None, sharder=None,
                  telemetry=NOOP, prefill_chunk: int | None = None,
-                 aging_steps: int | None = 64, max_preemptions: int = 0):
+                 aging_steps: int | None = 64, max_preemptions: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: int | None = None):
         if matmul_mode is not None:
             cfg = cfg.with_matmul_mode(matmul_mode)
         check_decode_capability(
             cfg, sharder,
             caller="the continuous-batching Server (serving/server.py)",
         )
+        if paged:
+            if not _bucketing_safe(cfg):
+                raise ValueError(
+                    "paged serving requires causal full attention in "
+                    "every layer: SSM states and sliding-window ring "
+                    "buffers do not decompose into position-indexed pages"
+                )
+            if prefill_chunk is not None:
+                raise ValueError(
+                    "prefill_chunk and paged are mutually exclusive (the "
+                    "chunk workspace commits whole slot rows)"
+                )
+            if sharder is not None:
+                raise ValueError(
+                    "paged serving is single-host for now (the pool "
+                    "itself places on a mesh via cache_spec_tree("
+                    "paged=True); drop one of paged / sharder)"
+                )
+        elif n_pages is not None:
+            raise ValueError("n_pages requires paged=True")
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError("prefill_chunk must be >= 1")
-            if not _bucketing_safe(cfg):
+            if not _bucketing_safe(cfg) or cfg.n_experts:
+                # chunked prefill is stricter than bucketing: the dense
+                # bf16 workspace runs each chunk through apply_layer_
+                # prefill_chunk, which supports attn+MLP layers only —
+                # MoE routing would mix chunk-local capacity decisions
                 raise ValueError(
                     "prefill_chunk needs a bucketing-safe arch (causal "
                     "full attention, dense FFN): sliding windows and MoE "
@@ -184,8 +233,15 @@ class Server:
         self.eos_id = eos_id
         self.sharder = sharder
         self.kvq = kv_spec(cfg)  # None = bf16 cache; else packed k-bit
-        self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype,
-                                sharder=sharder, telemetry=telemetry)
+        self._paged = paged
+        self._page_size = page_size if paged else None
+        if paged:
+            self.pool = PagedKVPool(cfg, num_slots, max_seq_len, dtype,
+                                    page_size=page_size, n_pages=n_pages,
+                                    telemetry=telemetry)
+        else:
+            self.pool = SlotKVCache(cfg, num_slots, max_seq_len, dtype,
+                                    sharder=sharder, telemetry=telemetry)
         self.scheduler = Scheduler(eos_id=eos_id, telemetry=telemetry,
                                    aging_steps=aging_steps,
                                    max_preemptions=max_preemptions)
@@ -207,6 +263,12 @@ class Server:
         decode_attn = (sharder.decode_attn_fn(num_slots, max_seq_len)
                        if sharder is not None else blocks.local_decode_attn)
 
+        # MoE archs bucket safely only with the router pad mask (junk
+        # tokens would otherwise compete for expert capacity — moe.py);
+        # exact-length prefills (unbucketed archs) keep pad_mask=None so
+        # their grouped dispatch stays byte-identical to the Engine's
+        use_pad_mask = bool(cfg.n_experts) and self._bucketed
+
         def prefill_into_slot(params, pool, prompt, length, slot, key,
                               temperature):
             """Fused admission: prefill [1, Sb], sample the first token
@@ -214,10 +276,12 @@ class Server:
             positions are causally downstream and cannot affect it), and
             scatter the KV rows into `slot` — one dispatch per
             admission, no full-cache intermediate leaving the jit."""
+            pm = ((jnp.arange(prompt.shape[1], dtype=jnp.int32)[None, :]
+                   < length) if use_pad_mask else None)
             with tp_scope():
                 h, caches, _ = lm.backbone_seq(
                     params, prompt, cfg, constrain=constrain, q_pad=q_pad,
-                    write_cache=True, cache_len=max_seq_len,
+                    write_cache=True, cache_len=max_seq_len, pad_mask=pm,
                 )
                 h_last = jax.lax.dynamic_index_in_dim(h, length - 1, 1,
                                                       keepdims=False)
@@ -238,6 +302,44 @@ class Server:
             return nxt, caches
 
         self._step = jax.jit(step, donate_argnums=(2,))
+
+        if paged:
+            def prefill_into_pages(params, pool, prompt, length, pages,
+                                   write_mask, key, temperature):
+                """Paged twin of prefill_into_slot: prefill [1, Sb] at its
+                own length (the page scatter reshapes the Sb rows into
+                Sb/ps pages), sample the first token at length-1, scatter
+                the private prompt pages (write_mask True) and send the
+                COW-shared prefix and bucket padding to trash page 0."""
+                pm = ((jnp.arange(prompt.shape[1], dtype=jnp.int32)[None, :]
+                       < length) if use_pad_mask else None)
+                h, caches, _ = lm.backbone_seq(
+                    params, prompt, cfg, write_cache=True, pad_mask=pm,
+                )
+                h_last = jax.lax.dynamic_index_in_dim(h, length - 1, 1,
+                                                      keepdims=False)
+                logits = lm.logits_from_hidden(params, h_last, cfg)
+                tok = sample_token(logits, key, temperature)
+                pool = scatter_pages(pool, caches, pages, write_mask,
+                                     length, page_size)
+                return tok, pool
+
+            self._prefill_paged = jax.jit(prefill_into_pages,
+                                          donate_argnums=(1,))
+
+            def step_paged(params, tok, caches, pos, key, temps, page_map):
+                """Decode step over page-major caches: the page table
+                snapshot is a TRACED argument, so admissions/retires that
+                rewrite it never recompile — the compiled program is the
+                same masked flash-decoding math on the gathered view."""
+                da = paged_decode_attn_fn(page_map, page_size)
+                logits, caches = lm.decode_step(
+                    params, tok, caches, pos, cfg, decode_attn=da,
+                )
+                nxt = sample_token(logits, key, temps)
+                return nxt, caches
+
+            self._step_paged = jax.jit(step_paged, donate_argnums=(2,))
 
         # optional roofline attribution (serving/profiler.py): a private
         # cost-cache session labelled with this server's quant config, and
@@ -337,11 +439,25 @@ class Server:
         prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
-        if len(prompt) + max_new > self.pool.cache_len:
+        # positions [0, L + max_new - 1) are written: the prompt plus every
+        # generated token EXCEPT the last, which is sampled and returned
+        # but never fed back — so L + max_new - 1 == cache_len still fits
+        # exactly (the old `L + max_new > cache_len` bound over-rejected
+        # that boundary request by one position)
+        if len(prompt) + max_new - 1 > self.pool.cache_len:
             raise ValueError(
-                f"prompt {len(prompt)} + max_new {max_new} exceeds the "
-                f"cache budget {self.pool.cache_len}"
+                f"prompt {len(prompt)} + max_new {max_new} needs "
+                f"{len(prompt) + max_new - 1} cache positions but the "
+                f"budget is {self.pool.cache_len}"
             )
+        if self._paged:
+            need = self.pool.pages_needed(len(prompt), max_new)
+            if need > self.pool.allocator.n_usable:
+                raise ValueError(
+                    f"request needs {need} pages worst-case but the pool "
+                    f"holds {self.pool.allocator.n_usable} — it could "
+                    f"never be admitted (raise n_pages or lower max_new)"
+                )
         req = Request(prompt=prompt, max_new=max_new, temperature=temperature,
                       priority=priority, arrival_time=arrival_time,
                       on_token=on_token)
@@ -404,10 +520,17 @@ class Server:
 
     def _retire(self, req, slot: int, reason: str) -> None:
         self.scheduler.retire(slot, self.steps)
-        self.pool.free(slot)
+        n_freed = self.pool.free(slot)
         tel = self.telemetry
         if tel.enabled:
-            tel.event("retire", tel.now(), request_id=req.id,
+            now = tel.now()
+            if self._paged:
+                # before the retire event: the trace validator closes a
+                # request's lifecycle at `retire` (trace.py)
+                tel.event("page_release", now, request_id=req.id,
+                          step=self.steps, n_pages=int(n_freed or 0),
+                          reason=reason)
+            tel.event("retire", now, request_id=req.id,
                       step=self.steps, n_tokens=len(req.tokens),
                       reason=reason)
 
@@ -418,23 +541,48 @@ class Server:
             req = self.scheduler.next_admissible(self.steps)
             if req is None:
                 break
-            if not self.pool.n_free:
-                # full pool: evict a strictly lower-priority victim if
-                # preemption is on (mid-chunk slots have no committed
-                # cache rows to spill and are never victims)
+            resume = req.id in self._spilled
+            L = len(req.prompt)
+            if self._paged:
+                # the bucket floor is the page size so full prompt pages
+                # tile the padded length (and join the COW key — pages.py)
+                Sb = bucket_len(L, minimum=max(8, self._page_size),
+                                cap=self.pool.cache_len)
+            else:
+                Sb = (bucket_len(L, cap=self.pool.cache_len)
+                      if self._bucketed else L)
+
+            def need_ok():
+                """Row AND (paged) page availability for this admission."""
+                if not self.pool.n_free:
+                    return False
+                if not self._paged:
+                    return True
+                if resume:
+                    return self.pool.can_resume_pages(
+                        self._spilled[req.id]["n_private"])
+                return self.pool.can_admit_pages(req.prompt, req.max_new, Sb)
+
+            blocked = False
+            while not need_ok():
+                # full pool (no row, or not enough pages): evict a strictly
+                # lower-priority victim if preemption is on (mid-chunk slots
+                # have no committed cache rows to spill and are never
+                # victims); each eviction frees a row and its private
+                # pages, so the loop terminates when victims run out
                 vslot = self.scheduler.preemption_victim(
                     req, self.steps, exclude=self._chunking)
                 if vslot is None:
+                    blocked = True
                     break
                 self._preempt(vslot, req)
+            if blocked:
+                break
             slot = self.pool.alloc()
             self.scheduler.bind(req, slot, self.steps)
-            if req.id in self._spilled:
+            if resume:
                 self._resume(req, slot)
                 continue
-            L = len(req.prompt)
-            Sb = (bucket_len(L, cap=self.pool.cache_len)
-                  if self._bucketed else L)
             if (self._prefill_chunk is not None and L > self._prefill_chunk
                     and Sb <= _FLASH_KV_CHUNK):
                 self._start_chunked(req, slot, L, Sb)
@@ -442,14 +590,28 @@ class Server:
             padded = np.zeros((1, Sb), dtype=np.int64)
             padded[0, :L] = req.prompt
             self._key, sub = jax.random.split(self._key)
-            pf_args = (self.params, self.pool.caches, jnp.asarray(padded),
-                       jnp.int32(L), jnp.int32(slot), sub,
-                       jnp.float32(req.temperature))
-            pf_name = f"prefill[{Sb}]"
+            if self._paged:
+                n_shared, n_new, pgs, wmask = self.pool.admit_pages(
+                    slot, req.id, req.prompt, req.max_new, Sb)
+                if tel.enabled:
+                    tel.event("page_alloc", tel.now(), request_id=req.id,
+                              step=self.steps, slot=slot, n_pages=n_new,
+                              n_shared=n_shared)
+                pf_fn = self._prefill_paged
+                pf_args = (self.params, self.pool.caches, jnp.asarray(padded),
+                           jnp.int32(L), jnp.asarray(pgs), jnp.asarray(wmask),
+                           sub, jnp.float32(req.temperature))
+                pf_name = f"prefill_paged[{Sb}]"
+            else:
+                pf_fn = self._prefill
+                pf_args = (self.params, self.pool.caches, jnp.asarray(padded),
+                           jnp.int32(L), jnp.int32(slot), sub,
+                           jnp.float32(req.temperature))
+                pf_name = f"prefill[{Sb}]"
             if self._prof is not None:
                 # AOT cost extraction happens BEFORE t0 so the one-time
                 # compile never pollutes the timed window
-                self._prof.ensure_costed(pf_name, self._prefill, pf_args)
+                self._prof.ensure_costed(pf_name, pf_fn, pf_args)
             if tel.enabled:
                 t0 = tel.now()
                 if req.t_submit is not None:
@@ -457,8 +619,12 @@ class Server:
                              request_id=req.id, step=self.steps,
                              steps=float(self.steps - req.arrival_time))
             with self._annot(pf_name):
-                tok, new_pool = self._prefill(*pf_args)
+                tok, new_pool = pf_fn(*pf_args)
             self.pool.install_prefill(slot, new_pool, L)
+            if self._paged:
+                # publish the full prompt pages for COW before anything
+                # can preempt this slot (spill retains sealed pages only)
+                self.pool.seal_slot(slot)
             if tel.enabled:
                 # fence at the dispatch boundary: host-side timing only,
                 # the compiled prefill is untouched
@@ -483,6 +649,12 @@ class Server:
                 self._retire(req, slot,
                              "budget" if len(req.tokens) >= req.max_new
                              else "eos")
+            elif self.pool.room(slot) <= 0:
+                # a full row must never join the decode batch: its write
+                # would clamp into the last stored position and corrupt it
+                # (unreachable while submit enforces the budget bound, but
+                # cheap to keep as the install/room/retire boundary guard)
+                self._retire(req, slot, "cache_full")
             else:
                 self._cur_tok[slot] = first
                 self._temps[slot] = req.temperature
@@ -504,6 +676,10 @@ class Server:
         self.pool.free(slot)
         if tel.enabled:
             t1 = tel.now()
+            if self._paged:
+                tel.event("page_release", t0, request_id=victim.id,
+                          step=self.steps, n_pages=spill["n_private"],
+                          reason="preempt")
             tel.event("preempt", t0, request_id=victim.id, step=self.steps,
                       slot=slot, by=by.id, n_tokens=len(victim.tokens))
             tel.span("spill", t0, t1, request_id=victim.id, step=self.steps,
@@ -523,6 +699,11 @@ class Server:
             jax.block_until_ready(
                 jax.tree_util.tree_leaves(self.pool.caches)[0])
             t1 = tel.now()
+            if self._paged:
+                tel.event("page_alloc", t0, request_id=req.id,
+                          step=self.steps, slot=slot,
+                          n_pages=spill["n_private"],
+                          n_shared=spill["n_retained"])
             tel.span("restore", t0, t1, request_id=req.id, step=self.steps,
                      slot=slot, bytes_packed=spill["bytes_packed"])
 
@@ -626,6 +807,9 @@ class Server:
             self._retire(req, slot,
                          "budget" if len(req.tokens) >= req.max_new
                          else "eos")
+        elif self.pool.room(slot) <= 0:
+            # same install/room/retire boundary guard as plain admission
+            self._retire(req, slot, "cache_full")
         else:
             self._cur_tok[slot] = first
             self._temps[slot] = req.temperature
@@ -640,13 +824,19 @@ class Server:
         self._key, sub = jax.random.split(self._key)
         tel = self.telemetry
         ds_args = (self.params, tok, self.pool.caches, pos, sub, temps)
+        step_fn = self._step
+        if self._paged:
+            # the table snapshot rides along as a traced argument — the
+            # compiled step is table-agnostic, so admissions never recompile
+            ds_args = ds_args + (jnp.asarray(self.pool.page_map),)
+            step_fn = self._step_paged
         if self._prof is not None:
-            self._prof.ensure_costed("decode_step", self._step, ds_args)
+            self._prof.ensure_costed("decode_step", step_fn, ds_args)
         if tel.enabled:
             n_active = self.pool.n_active
             t0 = tel.now()
         with self._annot("decode_step"):
-            nxt, self.pool.caches = self._step(*ds_args)
+            nxt, self.pool.caches = step_fn(*ds_args)
         if tel.enabled:
             # fence at the dispatch boundary (the np.asarray below would
             # sync anyway; the explicit fence makes the timed quantity

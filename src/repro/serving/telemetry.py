@@ -131,6 +131,25 @@ METRIC_FAMILIES = {
         ("gauge", "resident KV bytes; kind=packed|logical|per_device", None),
     "kv_pool_compression_x":
         ("gauge", "logical (bf16-equivalent) / packed resident bytes", None),
+    # paged KV pool (serving/pages.py; --paged serving only)
+    "kv_pages_total":
+        ("gauge", "allocatable pages in the paged pool (trash page "
+         "excluded)", None),
+    "kv_pages_free":
+        ("gauge", "pages on the free list", None),
+    "kv_pages_shared":
+        ("gauge", "pages referenced by more than one sequence (COW)", None),
+    "kv_pages_seqs_resident":
+        ("gauge", "sequences holding pages (running + preempted "
+         "prefix-retainers)", None),
+    "kv_pages_alloc_total":
+        ("counter", "fresh pages popped from the free list", None),
+    "kv_pages_freed_total":
+        ("counter", "pages returned to the free list (last reference "
+         "dropped)", None),
+    "kv_pages_cow_hits_total":
+        ("counter", "pages forked by refcount instead of recomputed "
+         "(prefix sharing)", None),
     # quantization health
     "kv_append_qerr_rms":
         ("gauge", "running mean RMS relative error of probed "

@@ -44,6 +44,13 @@ Request lifecycle names (docs/observability.md#span-schema):
                           host; attrs: slot, bytes_packed, bytes_logical
     restore       span  — spilled rows written back into a re-alloc'd
                           slot at resume; attrs: slot, bytes_packed
+    page_alloc    event — (--paged only) pages allocated at admission or
+                          resume; attrs: slot, n_pages (fresh),
+                          n_shared (COW-forked prefix pages)
+    page_release  event — (--paged only) page references dropped; attrs:
+                          n_pages, reason (preempt spills release the
+                          private suffix; retires precede the retire
+                          event so the lifecycle stays closed)
     retire        event — request finished; attrs: n_tokens, reason
 
 ``validate_events`` checks structure AND lifecycle ordering per request:
@@ -76,7 +83,12 @@ TRACE_VERSION = 2
 
 SPAN_NAMES = {"queue_wait", "prefill", "prefill_chunk", "decode_step",
               "spill", "restore"}
-EVENT_NAMES = {"submit", "token", "preempt", "retire", "truncated"}
+#: ``page_alloc`` / ``page_release`` are emitted by --paged serving only
+#: (serving/pages.py): page_alloc carries n_pages (fresh) + n_shared (COW
+#: forks) per admission/resume; page_release carries n_pages + reason and
+#: precedes the request's preempt/retire event.
+EVENT_NAMES = {"submit", "token", "preempt", "retire", "truncated",
+               "page_alloc", "page_release"}
 
 _REQUIRED_KEYS = {"v", "kind", "name", "request_id", "t0", "t1", "step",
                   "attrs"}

@@ -65,6 +65,14 @@ def _args(*argv):
     (("--max-preemptions", "2", "--priorities", "1"), "--priorities"),
     # the profiler's gauges need a telemetry sink to land in
     (("--profile",), "--profile"),
+    # paged-cache flags: continuous-only, exclusive with chunking/mesh
+    (("--mode", "static", "--paged"), "static"),
+    (("--page-size", "8"), "--paged"),
+    (("--pages", "16"), "--paged"),
+    (("--paged", "--prefill-chunk", "8"), "mutually exclusive"),
+    (("--paged", "--mesh", "2x4"), "single-host"),
+    (("--paged", "--page-size", "0"), "positive"),
+    (("--paged", "--pages", "1"), "trash page"),
 ])
 def test_conflicting_flags_rejected(argv, needle):
     with pytest.raises(SystemExit, match=needle):
@@ -97,6 +105,9 @@ def test_mesh_flag_validated():
     ("--profile", "--metrics-out", "m.prom"),
     ("--profile", "--trace-out", "t.jsonl"),
     ("--mode", "static", "--profile", "--metrics-out", "m.prom"),
+    ("--paged",),
+    ("--paged", "--page-size", "8", "--pages", "32", "--kv-bits", "4"),
+    ("--paged", "--priorities", "2", "--max-preemptions", "1"),
 ])
 def test_legal_flag_combinations_validate(argv):
     serve_mod.validate_flags(_args(*argv))
@@ -136,6 +147,9 @@ def tiny_plan(tmp_path_factory):
     # the SLA scheduler serves end to end through the launcher
     ("--mode", "continuous", "--kv-bits", "4", "--prefill-chunk", "8",
      "--priorities", "2", "--max-preemptions", "1", "--max-new", "4"),
+    # the paged KV cache serves end to end through the launcher
+    ("--mode", "continuous", "--kv-bits", "4", "--paged", "--page-size",
+     "8", "--max-new", "4"),
 ])
 def test_flag_matrix_serves(argv, tiny_plan, capsys):
     argv = list(argv)

@@ -179,6 +179,34 @@ if HAVE_HYPOTHESIS:
                  telemetry=Telemetry(), eos_id=7, eos_after=eos_after)
 
 
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None, derandomize=True)
+    @given(n_shorts=st.integers(1, 12),
+           gap=st.integers(1, 3),
+           long_len=st.integers(8, 30),
+           max_preemptions=st.integers(1, 3),
+           n_slots=st.integers(1, 3))
+    def test_bounded_starvation_under_preempt_requeue_cycles(
+            n_shorts, gap, long_len, max_preemptions, n_slots):
+        """Adversarial eviction traffic: one long low-class request plus
+        a steady stream of urgent shorts timed to re-evict it the moment
+        it resumes.  The long request must still drain within the
+        simulate() step bound (asserted inside), be evicted at most
+        max_preemptions times, and emit its full budget — repeated
+        preempt/requeue cycles cannot starve it now that the victim
+        tiebreak keys on FIRST admission (a resume no longer re-marks
+        the victim as freshest)."""
+        specs = sorted([(1, 0, long_len)]
+                       + [(0, 1 + i * gap, 2) for i in range(n_shorts)],
+                       key=lambda s: s[1])
+        sch, _ = simulate(specs, n_slots=n_slots, aging_steps=4,
+                          max_preemptions=max_preemptions,
+                          telemetry=Telemetry())
+        lo = next(r for r in sch.finished if r.priority == 1)
+        assert lo.preemptions <= max_preemptions
+        assert len(lo.tokens) == long_len
+
+
 # -------------------------------------------------------------------------
 # derandomized adversarial cases (always run)
 # -------------------------------------------------------------------------
@@ -256,6 +284,38 @@ def test_aging_lets_background_class_overtake():
         "without aging the background request should go last"
     assert admitted_rank(2) < len(specs) - 1, \
         "aging never promoted the waiting background request"
+
+
+def test_preemption_victim_keys_on_first_admission():
+    """Regression: the victim tiebreak used ``admitted_at``, which a
+    resume refreshes — so a just-restored request always looked like the
+    freshest ("least sunk work") victim and was re-evicted on every
+    urgent arrival until its immunity cap: starvation by eviction.  The
+    key must be the preemption-invariant FIRST admission time."""
+    sch = Scheduler(max_preemptions=5)
+    lo1 = sch.submit(Request(prompt=[1], max_new=9, priority=1,
+                             arrival_time=0.0))
+    sch.bind(lo1, 0, 0)                      # first admission at t=0
+    lo2 = sch.submit(Request(prompt=[1], max_new=9, priority=1,
+                             arrival_time=1.0))
+    sch.bind(lo2, 1, 1)                      # first admission at t=1
+    hi1 = sch.submit(Request(prompt=[1], max_new=1, priority=0,
+                             arrival_time=2.0))
+    # steer the first eviction onto lo1 (exclude is the server's knob
+    # for ineligible slots) so lo1 becomes the resumed request
+    assert sch.preemption_victim(hi1, 2, exclude={1}) == 0
+    sch.preempt(0, 2)
+    sch.bind(hi1, 0, 2)
+    hi1.tokens.append(0)
+    sch.retire(0, 3)
+    sch.bind(lo1, 0, 6)                      # resume: admitted_at -> 6
+    assert lo1.first_admitted_at == 0.0 and lo1.admitted_at == 6
+    hi2 = sch.submit(Request(prompt=[1], max_new=1, priority=0,
+                             arrival_time=7.0))
+    # lo2's FIRST admission (t=1) is later than lo1's (t=0): lo2 has the
+    # least sunk work and must be the victim.  The admitted_at bug would
+    # re-pick just-resumed lo1 (admitted_at 6 > 1) here.
+    assert sch.preemption_victim(hi2, 7) == 1
 
 
 def test_request_validation():

@@ -134,14 +134,15 @@ def test_pool_alloc_free_errors(params):
 
 
 def test_moe_serving_matches_per_request_oracle():
-    """MoE archs prefill at exact length (no bucketing: padded tokens
-    would compete for expert capacity) and each request must match the
-    SINGLE-ROW Engine — the batched Engine is not row-independent for
-    MoE because capacity dispatch pools tokens across rows."""
+    """MoE archs now BUCKET their prefills: the router pad mask
+    (models/moe.py pad_mask) zeroes padding out of the capacity
+    accounting, so a bucket-padded prefill keeps/drops exactly what the
+    exact-length run does — and each request still matches the
+    SINGLE-ROW Engine bitwise."""
     from repro.serving.server import _bucketing_safe
 
     cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
-    assert not _bucketing_safe(cfg)
+    assert _bucketing_safe(cfg)  # the pad-mask fix admits MoE archs
     mparams = lm.init_params(jax.random.PRNGKey(0), cfg)
     B, S, N = 3, 10, 4
     prompts = np.asarray(
@@ -156,6 +157,25 @@ def test_moe_serving_matches_per_request_oracle():
     for b, rid in enumerate(ids):
         ref = np.asarray(eng.generate(jnp.asarray(prompts[b : b + 1]), N))
         assert res[rid] == list(ref[0]), b
+
+
+def test_moe_bucketing_bounds_recompiles():
+    """The regression the capacity fix exists for: with bucketing
+    admitted, distinct prompt lengths inside one bucket share ONE
+    compiled prefill (the old exact-length fallback compiled once per
+    distinct length)."""
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    mparams = lm.init_params(jax.random.PRNGKey(0), cfg)
+    srv = Server(mparams, cfg, num_slots=2, max_seq_len=32)
+    rng = np.random.default_rng(7)
+    for i, L in enumerate((9, 10, 11, 12, 13)):  # all bucket to 16
+        srv.submit(rng.integers(1, cfg.vocab_size, size=L), 2,
+                   arrival_time=float(i))
+    res = srv.run_until_drained()
+    assert all(len(t) == 2 for t in res.values())
+    sizes = getattr(srv._prefill, "_cache_size", None)
+    if sizes is not None:  # jax>=0.4 exposes the compile-cache size
+        assert sizes() == 1, "one bucket must mean one compiled prefill"
 
 
 # -------------------------------------------------------------------------
