@@ -1,0 +1,67 @@
+"""Single lint entry point for CI and pre-commit (docs/analysis.md).
+
+Runs, in order, failing on the first non-zero:
+
+1. ``repro.analysis.lint`` — the Layer-1 AST rules (RL001–RL005)
+   against the committed ``LINT_BASELINE.json`` (new findings, stale
+   entries, and unjustified baseline entries all fail);
+2. ``scripts/check_markdown_links.py`` — intra-repo markdown link
+   integrity (folded in from the old docs-lane step);
+3. with ``--audit``, the Layer-2 compiled-program auditor over the full
+   Engine+Server grid at kv16/8/4 (slow: builds and lowers every
+   serving jit — the CI lint lane runs it, local quick checks may not).
+
+Usage::
+
+    python scripts/lint.py [--audit] [--root DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT / "scripts"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="scripts/lint.py",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--audit", action="store_true",
+                    help="also run the Layer-2 compiled-program auditor "
+                         "(kv16/8/4 grid; slow)")
+    ap.add_argument("--root", default=None, help="repo root override")
+    args = ap.parse_args(argv)
+    root = Path(args.root) if args.root else REPO_ROOT
+
+    from repro.analysis import lint as lint_mod
+
+    print("== reprolint (Layer 1: AST rules) ==")
+    rc = lint_mod.lint(root)
+    if rc != 0:
+        return rc
+
+    print("== markdown link check ==")
+    import check_markdown_links
+
+    rc = check_markdown_links.main()
+    if rc != 0:
+        return rc
+
+    if args.audit:
+        print("== compiled-program audit (Layer 2: kv16/8/4) ==")
+        from repro.analysis import audit as audit_mod
+
+        rc = audit_mod.main([])
+        if rc != 0:
+            return rc
+
+    print("lint: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

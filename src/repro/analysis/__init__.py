@@ -1,0 +1,16 @@
+"""reprolint: static analysis for the quantized serving stack.
+
+Two layers:
+
+* Layer 1 (:mod:`repro.analysis.rules`, CLI :mod:`repro.analysis.lint`) —
+  an AST rule engine over ``src/`` enforcing the repo's host-side-only
+  policy and name-consistency invariants (rule IDs ``RL001``–``RL005``).
+* Layer 2 (:mod:`repro.analysis.audit`) — a compiled-program auditor
+  that AOT-lowers the real serving jits and asserts invariants on the
+  HLO itself: no host callbacks, donation actually landed, dtype fences
+  survive lowering, page-table remaps never recompile.
+
+See ``docs/analysis.md`` for the rule catalog.
+"""
+
+from repro.analysis.findings import Baseline, Finding  # noqa: F401

@@ -1,0 +1,386 @@
+"""Layer-2 compiled-program auditor for the serving jits.
+
+AST lints (:mod:`repro.analysis.rules`) see only source; this module
+audits what XLA actually compiled.  It builds the real Engine/Server on
+a tiny arch, drives a small workload (including a forced preemption so
+the lazy spill/restore scatters exist), snapshots each jitted program's
+argument avals with a transparent :class:`Recorder`, then AOT-relowers
+every program via the same ``.lower(...).compile()`` path the PR-8
+profiler uses and asserts on the program text itself:
+
+* **no_host_callbacks** — the optimized HLO contains no host callback
+  custom-calls (``xla_python_cpu_callback`` & friends), infeed or
+  outfeed: the host-side-only telemetry policy held transitively, which
+  the AST rule cannot prove.
+* **donation** — every leaf of each ``donate_argnums`` argument shows
+  up in the compiled ``input_output_alias`` table.  A donated buffer
+  XLA could not alias is a silent full copy (the spill/restore scatter
+  regression this audit exists to catch).
+* **fused_fence** — fused-matmul programs keep their
+  ``optimization_barrier`` dtype fence in the lowered StableHLO (on
+  TPU: lower to a Pallas/Mosaic custom-call).  Asserted on the
+  *lowered* text because XLA:CPU elides barriers post-optimization.
+* **recompile** — a paged decode sweep across admissions/retires (page
+  tables remapping every step) compiles exactly once per bucket;
+  ``python -m repro.analysis.audit`` and the CI lint lane run the whole
+  grid at kv16/8/4.
+
+Run: ``PYTHONPATH=src python -m repro.analysis.audit [--kv-bits 16 8 4]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# HLO predicates (pure text analysis — unit-testable without building servers)
+
+_CUSTOM_CALL_RE = re.compile(r'custom_call_target="([^"]*)"')
+_HOSTILE_TARGETS = ("callback", "infeed", "outfeed", "host_")
+
+
+def host_callback_targets(hlo_text: str) -> list:
+    """Custom-call targets (plus infeed/outfeed ops) that touch the host."""
+    bad = [t for t in _CUSTOM_CALL_RE.findall(hlo_text)
+           if any(h in t.lower() for h in _HOSTILE_TARGETS)]
+    for op in ("infeed(", "outfeed("):
+        if op in hlo_text:
+            bad.append(op.rstrip("("))
+    return bad
+
+
+def parse_alias_params(hlo_text: str) -> list:
+    """Parameter numbers aliased to outputs per ``input_output_alias={...}``.
+
+    The header looks like ``input_output_alias={ {1}: (12, {}, may-alias),
+    {2}: (13, {}, may-alias) }`` — one entry per donated buffer XLA
+    actually reused.  Brace-balanced extraction, then one param number
+    per ``(N, ...)`` tuple.
+    """
+    marker = "input_output_alias={"
+    i = hlo_text.find(marker)
+    if i < 0:
+        return []
+    j = i + len(marker)
+    depth, k = 1, j
+    while k < len(hlo_text) and depth:
+        if hlo_text[k] == "{":
+            depth += 1
+        elif hlo_text[k] == "}":
+            depth -= 1
+        k += 1
+    block = hlo_text[j:k - 1]
+    return [int(m.group(1)) for m in re.finditer(r"\(\s*(\d+)\s*,", block)]
+
+
+def fused_signature_present(stablehlo_text: str) -> bool:
+    """Backend-aware fused-path signature: Pallas custom-call on TPU,
+    the dequant dtype fence on CPU (where the fused mode is the jnp
+    path guarded by ``jax.lax.optimization_barrier``)."""
+    if jax.default_backend() == "tpu":
+        return ("tpu_custom_call" in stablehlo_text
+                or "mosaic" in stablehlo_text.lower())
+    return "optimization_barrier" in stablehlo_text
+
+
+def compile_count(fn) -> int | None:
+    """Compiled-variant count of a jitted callable (None if unsupported).
+
+    Accepts either a raw jitted function or a :class:`Recorder` wrapper;
+    this is the one sanctioned way tests count recompiles (replaces
+    ad-hoc ``getattr(fn, "_cache_size")`` poking).
+    """
+    target = getattr(fn, "jitted", fn)
+    cs = getattr(target, "_cache_size", None)
+    return int(cs()) if callable(cs) else None
+
+
+# ---------------------------------------------------------------------------
+# argument capture
+
+
+def _abstract(x):
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+    return x
+
+
+class Recorder:
+    """Transparent pass-through over a jitted callable that snapshots the
+    abstract (shape, dtype) of the first call's arguments, so the program
+    can be AOT-relowered after donated buffers are consumed."""
+
+    def __init__(self, jitted, name: str):
+        self.jitted = jitted
+        self.name = name
+        self.abstract = None
+        self.calls = 0
+
+    def __call__(self, *args):
+        if self.abstract is None:
+            self.abstract = jax.tree_util.tree_map(_abstract, args)
+        self.calls += 1
+        return self.jitted(*args)
+
+    def lower(self):
+        assert self.abstract is not None, f"{self.name} was never called"
+        return self.jitted.lower(*self.abstract)
+
+    def donated_leaves(self, argnums) -> int:
+        assert self.abstract is not None, f"{self.name} was never called"
+        return sum(len(jax.tree_util.tree_leaves(self.abstract[i]))
+                   for i in argnums)
+
+
+# ---------------------------------------------------------------------------
+# report
+
+
+@dataclass
+class Check:
+    program: str
+    check: str
+    ok: bool
+    detail: str = ""
+
+    def render(self) -> str:
+        mark = "ok " if self.ok else "FAIL"
+        return f"[{mark}] {self.program:<32s} {self.check:<18s} {self.detail}"
+
+
+@dataclass
+class AuditReport:
+    checks: list = field(default_factory=list)
+
+    def add(self, program: str, check: str, ok: bool, detail: str = ""):
+        self.checks.append(Check(program, check, bool(ok), detail))
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    def failures(self) -> list:
+        return [c for c in self.checks if not c.ok]
+
+    def render(self) -> str:
+        return "\n".join(c.render() for c in self.checks)
+
+
+def audit_lowered(report: AuditReport, name: str, lowered, *,
+                  expect_donated: int = 0, expect_fused: bool = False):
+    """Run the text-level checks on one AOT-lowered program."""
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    bad = host_callback_targets(hlo)
+    report.add(name, "no_host_callbacks", not bad,
+               "clean" if not bad else f"found {sorted(set(bad))}")
+    if expect_donated:
+        aliases = parse_alias_params(hlo)
+        report.add(name, "donation", len(aliases) >= expect_donated,
+                   f"{len(aliases)}/{expect_donated} donated buffers aliased")
+    if expect_fused:
+        stablehlo = lowered.as_text()
+        report.add(name, "fused_fence", fused_signature_present(stablehlo),
+                   f"backend={jax.default_backend()}")
+    return compiled
+
+
+# ---------------------------------------------------------------------------
+# workload drivers (tiny arch, deterministic)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, n).astype(np.int32) for n in lens]
+
+
+def _wrap(srv_or_eng, attr: str) -> Recorder:
+    rec = Recorder(getattr(srv_or_eng, attr), attr)
+    setattr(srv_or_eng, attr, rec)
+    return rec
+
+
+def audit_engine(report: AuditReport, params, cfg, tag: str, *,
+                 fused: bool = False):
+    from repro.serving import Engine
+
+    eng = Engine(params, cfg, max_seq_len=16)
+    pf, st = _wrap(eng, "_prefill"), _wrap(eng, "_step")
+    prompts = jnp.asarray(np.stack(_prompts(cfg, [8, 8], seed=1)))
+    eng.generate(prompts, 4)
+    audit_lowered(report, f"engine.prefill[{tag}]", pf.lower(),
+                  expect_fused=fused)
+    audit_lowered(report, f"engine.decode_step[{tag}]", st.lower(),
+                  expect_donated=st.donated_leaves((2,)), expect_fused=fused)
+
+
+def _capture_pool_fns(pool):
+    """Instance-patch spill/restore so their runtime arguments survive the
+    drain (the jits are created lazily inside the first preemption)."""
+    captured = {}
+    orig_spill, orig_restore = pool.spill_slot, pool.restore_slot
+
+    def spill_slot(slot):
+        rec = orig_spill(slot)
+        captured["spill"] = rec
+        return rec
+
+    def restore_slot(slot, spill):
+        captured["restore_slot"] = slot
+        return orig_restore(slot, spill)
+
+    pool.spill_slot = spill_slot
+    pool.restore_slot = restore_slot
+    return captured
+
+
+def _run_preempting_serve(srv, cfg, *, lens=(12, 12, 12), max_new=10,
+                          priorities=(1, 1, 0)):
+    for i, (pr, prio) in enumerate(zip(_prompts(cfg, list(lens), seed=2),
+                                       priorities)):
+        srv.submit(pr, max_new=max_new, arrival_time=float(i), priority=prio)
+    srv.run_until_drained()
+
+
+def audit_server_slot(report: AuditReport, params, cfg, tag: str, *,
+                      fused: bool = False):
+    from repro.serving import Server
+
+    srv = Server(params, cfg, num_slots=2, max_seq_len=32, max_preemptions=2)
+    pf, st = _wrap(srv, "_prefill"), _wrap(srv, "_step")
+    captured = _capture_pool_fns(srv.pool)
+    _run_preempting_serve(srv, cfg)
+    audit_lowered(report, f"server.prefill[{tag}]", pf.lower(),
+                  expect_donated=pf.donated_leaves((1,)), expect_fused=fused)
+    audit_lowered(report, f"server.decode_step[{tag}]", st.lower(),
+                  expect_donated=st.donated_leaves((2,)), expect_fused=fused)
+    preempted = srv.scheduler.n_preemptions > 0 and "spill" in captured
+    report.add(f"server[{tag}]", "preemption_forced", preempted,
+               f"n_preemptions={srv.scheduler.n_preemptions}")
+    if preempted:
+        pool = srv.pool
+        n_leaves = len(jax.tree_util.tree_leaves(pool.caches))
+        lowered = pool._restore_fn.lower(
+            jax.tree_util.tree_map(_abstract, pool.caches),
+            [jnp.asarray(r) for r in captured["spill"]["rows"]],
+            captured["restore_slot"])
+        audit_lowered(report, f"slot_pool.restore_scatter[{tag}]", lowered,
+                      expect_donated=n_leaves)
+        audit_lowered(report, f"slot_pool.spill_gather[{tag}]",
+                      pool._spill_fn.lower(
+                          jax.tree_util.tree_map(_abstract, pool.caches),
+                          captured["restore_slot"]))
+
+
+def audit_server_chunked(report: AuditReport, params, cfg, tag: str):
+    from repro.serving import Server
+
+    srv = Server(params, cfg, num_slots=2, max_seq_len=32, prefill_chunk=4)
+    ck, cm = _wrap(srv, "_chunk_step"), _wrap(srv, "_chunk_commit")
+    for i, pr in enumerate(_prompts(cfg, [12, 9], seed=3)):
+        srv.submit(pr, max_new=4, arrival_time=float(i))
+    srv.run_until_drained()
+    audit_lowered(report, f"server.chunk_step[{tag}]", ck.lower(),
+                  expect_donated=ck.donated_leaves((1,)))
+    # commit donates the pool only (the workspace has no same-shaped
+    # output to alias into — see the donate_argnums comment in server.py)
+    audit_lowered(report, f"server.chunk_commit[{tag}]", cm.lower(),
+                  expect_donated=cm.donated_leaves((1,)))
+
+
+def audit_server_paged(report: AuditReport, params, cfg, tag: str):
+    """Paged variants + the remap compile-count assertion: page tables are
+    traced arguments, so a sweep of admissions/retires/preemptions (the
+    tables remapping every admission) must never recompile the decode
+    step — exactly one compile per prefill bucket, one decode program."""
+    from repro.serving import Server
+
+    srv = Server(params, cfg, num_slots=2, max_seq_len=64,
+                 paged=True, page_size=8, max_preemptions=2)
+    pf, st = _wrap(srv, "_prefill_paged"), _wrap(srv, "_step_paged")
+    captured = _capture_pool_fns(srv.pool)
+    # two buckets (12->16, 5/7->8), slot churn + preemption => remaps
+    for i, (pr, prio) in enumerate(zip(
+            _prompts(cfg, [12, 12, 5, 7, 12], seed=4), (1, 1, 0, 0, 1))):
+        srv.submit(pr, max_new=6, arrival_time=float(i), priority=prio)
+    srv.run_until_drained()
+    audit_lowered(report, f"server.prefill_paged[{tag}]", pf.lower(),
+                  expect_donated=pf.donated_leaves((1,)))
+    audit_lowered(report, f"server.decode_step_paged[{tag}]", st.lower(),
+                  expect_donated=st.donated_leaves((2,)))
+    n_steps = compile_count(st)
+    report.add(f"server.decode_step_paged[{tag}]", "recompile",
+               n_steps == 1, f"{n_steps} compiles across remap sweep (want 1)")
+    n_pf = compile_count(pf)
+    report.add(f"server.prefill_paged[{tag}]", "recompile", n_pf == 2,
+               f"{n_pf} compiles for 2 buckets (want 2)")
+    preempted = srv.scheduler.n_preemptions > 0 and "spill" in captured
+    report.add(f"server.paged[{tag}]", "preemption_forced", preempted,
+               f"n_preemptions={srv.scheduler.n_preemptions}")
+    if preempted:
+        pool = srv.pool
+        n_leaves = len(jax.tree_util.tree_leaves(pool.caches))
+        pgs = jnp.zeros(pool.pages_per_seq, jnp.int32)
+        lowered = pool._restore_fn.lower(
+            jax.tree_util.tree_map(_abstract, pool.caches),
+            [jnp.asarray(r) for r in captured["spill"]["rows"]], pgs)
+        audit_lowered(report, f"paged_pool.reattach_scatter[{tag}]", lowered,
+                      expect_donated=n_leaves)
+        if pool._wipe_fn is not None:
+            n_pos = 1  # only pos leaves are written; the rest pass through
+            audit_lowered(report, f"paged_pool.page_wipe[{tag}]",
+                          pool._wipe_fn.lower(
+                              jax.tree_util.tree_map(_abstract, pool.caches),
+                              pgs),
+                          expect_donated=n_pos)
+
+
+def run_audit(arch: str = "tiny-160k", kv_bits=(16, 8, 4),
+              fused_bits: int = 4) -> AuditReport:
+    """The full grid the CI lint lane runs (see docs/analysis.md#layer-2)."""
+    from repro.configs import QuantConfig
+    from repro.configs.registry import get_arch
+    from repro.models import lm
+    from repro.models.quantize import quantize_params
+
+    base = get_arch(arch)
+    report = AuditReport()
+    for kv in kv_bits:
+        cfg = base if kv == 16 else base.with_kv_quant(kv)
+        tag = f"kv{kv}"
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        audit_engine(report, params, cfg, tag)
+        audit_server_slot(report, params, cfg, tag)
+        audit_server_chunked(report, params, cfg, tag)
+        audit_server_paged(report, params, cfg, tag)
+        # fused GEMM: packed codes reach the kernel inside the same jits
+        qcfg = QuantConfig(bits=fused_bits, dtype="float", block_size=64)
+        qparams = quantize_params(params, qcfg, cfg)
+        fcfg = cfg.with_matmul_mode("fused")
+        audit_server_slot(report, qparams, fcfg, f"{tag}+fused", fused=True)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.analysis.audit",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tiny-160k")
+    ap.add_argument("--kv-bits", type=int, nargs="+", default=[16, 8, 4])
+    args = ap.parse_args(argv)
+    report = run_audit(arch=args.arch, kv_bits=tuple(args.kv_bits))
+    print(report.render())
+    n_fail = len(report.failures())
+    print(f"audit: {'OK' if report.ok else 'FAIL'} — "
+          f"{len(report.checks)} checks, {n_fail} failures")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,6 +68,7 @@ instead of silently ignoring them.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -226,6 +227,14 @@ def validate_flags(args) -> None:
         if args.pages is not None and args.pages < 2:
             raise SystemExit("--pages wants >= 2 (page 0 is the reserved "
                              f"trash page), got {args.pages}")
+    if args.temperature < 0.0:
+        raise SystemExit("--temperature must be >= 0 (0 samples greedily), "
+                         f"got {args.temperature}")
+    if args.ckpt_dir is not None and not os.path.isdir(args.ckpt_dir):
+        raise SystemExit(
+            f"--ckpt-dir {args.ckpt_dir} is not a directory; point it at a "
+            "CheckpointManager dir (or drop it for random init)"
+        )
     if args.priorities is not None and args.priorities < 1:
         raise SystemExit("--priorities wants at least one class, "
                          f"got {args.priorities}")

@@ -386,7 +386,12 @@ class Server:
                 pool = scatter_row(pool, cc, slot, length)
                 return tok, pool
 
-            self._chunk_commit = jax.jit(chunk_commit, donate_argnums=(1, 2))
+            # donate the pool only: the outputs are (token, pool), so the
+            # workspace has no same-shaped output to alias into — donating
+            # it is an unfulfillable claim (analysis.audit rejects donated
+            # leaves absent from input_output_alias); it dies by refcount
+            # when the chunk state is dropped right after commit
+            self._chunk_commit = jax.jit(chunk_commit, donate_argnums=(1,))
 
         # append-quantize health probe (telemetry.kv_probe_every > 0 and a
         # quantized cache): a SEPARATE bf16-cache prefill jit whose K/V

@@ -73,6 +73,9 @@ def _args(*argv):
     (("--paged", "--mesh", "2x4"), "single-host"),
     (("--paged", "--page-size", "0"), "positive"),
     (("--paged", "--pages", "1"), "trash page"),
+    # sampling / checkpoint flags validate their values up front
+    (("--temperature", "-0.5"), "--temperature"),
+    (("--ckpt-dir", "/nonexistent/ckpt-dir-for-test"), "--ckpt-dir"),
 ])
 def test_conflicting_flags_rejected(argv, needle):
     with pytest.raises(SystemExit, match=needle):

@@ -44,6 +44,7 @@ except ImportError:  # property tests skip; parametrized cases still run
 from repro.configs.registry import get_arch
 from repro.kernels.kv_dequant import gather_pages
 from repro.models import lm
+from repro.analysis.audit import compile_count
 from repro.serving import (
     NOOP,
     PageAllocator,
@@ -407,6 +408,32 @@ def test_paged_trace_and_gauges():
     assert reg.counter("kv_pages_freed_total").value \
         == reg.counter("kv_pages_alloc_total").value, \
         "drained serve must free every allocated page"
+
+
+def test_page_remap_sweep_compiles_once_per_bucket():
+    """Auditor-backed recompile regression (analysis.audit.compile_count):
+    the page table rides as a traced argument, so a sweep of staggered
+    admissions, retires, and preemptions — the tables remapping at every
+    slot turnover — must reuse ONE compiled decode step, and prefill
+    must compile exactly once per length bucket."""
+    cfg = CFG.with_kv_quant(4)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    # buckets: 9..12 -> 16, 5/7 -> 8; slot churn guarantees fresh tables
+    lens = (9, 12, 5, 10, 7, 11)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in lens]
+    srv, out = _serve(params, cfg, prompts, paged=True, num_slots=2,
+                      max_new=6, max_preemptions=1,
+                      priorities=[1, 1, 0, 0, 1, 0])
+    assert all(len(t) == 6 for t in out.values())
+    assert srv.scheduler.n_preemptions > 0, "sweep must exercise a remap " \
+        "via spill/restore, not just slot turnover"
+    n_step = compile_count(srv._step_paged)
+    if n_step is not None:  # jax>=0.4 exposes the compile-cache size
+        assert n_step == 1, f"page remaps recompiled decode: {n_step}"
+        n_pf = compile_count(srv._prefill_paged)
+        assert n_pf == 2, f"2 buckets must mean 2 compiled prefills, " \
+            f"got {n_pf}"
 
 
 def test_paged_flag_validation():

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.audit import compile_count
 from repro.configs import QuantConfig
 from repro.configs.registry import get_arch
 from repro.data import synthetic
@@ -173,9 +174,9 @@ def test_moe_bucketing_bounds_recompiles():
                    arrival_time=float(i))
     res = srv.run_until_drained()
     assert all(len(t) == 2 for t in res.values())
-    sizes = getattr(srv._prefill, "_cache_size", None)
-    if sizes is not None:  # jax>=0.4 exposes the compile-cache size
-        assert sizes() == 1, "one bucket must mean one compiled prefill"
+    n = compile_count(srv._prefill)
+    if n is not None:  # jax>=0.4 exposes the compile-cache size
+        assert n == 1, "one bucket must mean one compiled prefill"
 
 
 # -------------------------------------------------------------------------
